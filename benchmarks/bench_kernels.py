@@ -1,0 +1,54 @@
+"""Pallas kernel benchmarks (interpret mode on CPU): correctness-at-size
+plus call latency vs the pure-jnp oracle.  Interpret mode executes the
+kernel body in Python, so latency here validates plumbing, not TPU speed —
+the TPU claim lives in the BlockSpec arithmetic documented in kernels/."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ref import attention_ref, ssd_ref
+
+
+def bench_flash_attention(results: list):
+    rng = np.random.default_rng(0)
+    B, S, H, K, Dh = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, K, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, Dh)), jnp.float32)
+    t0 = time.perf_counter()
+    out = ops.flash_attention(q, k, v, block_q=128, block_k=128,
+                              interpret=True)
+    dt = time.perf_counter() - t0
+    ref = attention_ref(q, k, v)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err < 2e-4, err
+    results.append(("flash_attention_512_interpret", dt * 1e6,
+                    f"max_err={err:.2e}"))
+
+
+def bench_ssd_scan(results: list):
+    rng = np.random.default_rng(1)
+    B, S, H, P, N = 1, 512, 4, 32, 32
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt_ = jnp.asarray(rng.random((B, S, H)) * 0.1 + 0.01, jnp.float32)
+    A = -jnp.asarray(rng.random((H,)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    t0 = time.perf_counter()
+    y = ops.ssd_scan(x, dt_, A, Bm, Cm, chunk=128, interpret=True)
+    el = time.perf_counter() - t0
+    ref = ssd_ref(x, dt_, A, Bm, Cm)
+    err = float(jnp.max(jnp.abs(y - ref)))
+    assert err < 2e-3, err
+    results.append(("ssd_scan_512_interpret", el * 1e6,
+                    f"max_err={err:.2e}"))
+
+
+def run(results: list):
+    bench_flash_attention(results)
+    bench_ssd_scan(results)

@@ -1,0 +1,51 @@
+"""Roofline summary — renders EXPERIMENTS.md §Roofline from the dry-run
+JSONs under results/dryrun/.  One row per (arch x shape): the three terms,
+the bottleneck, and MODEL_FLOPS/HLO_FLOPs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(mesh="single"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(mesh="single") -> str:
+    recs = load_records(mesh)
+    if not recs:
+        return "(no dry-run records — run repro.launch.dryrun first)"
+    hdr = (f"{'arch':<22} {'shape':<12} {'C(s)':>9} {'M(s)':>9} {'N(s)':>9} "
+           f"{'bound':<7} {'useful':>6} {'peakGB':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        rl = r["roofline"]
+        peak = r.get("memory", {}).get("peak_bytes", 0) / 2**30
+        lines.append(
+            f"{r['arch']:<22} {r['shape']:<12} "
+            f"{rl['compute_s']:>9.3g} {rl['memory_s']:>9.3g} "
+            f"{rl['collective_s']:>9.3g} {rl['bottleneck']:<7} "
+            f"{r['useful_flops_ratio']:>6.2f} {peak:>7.2f}")
+    return "\n".join(lines)
+
+
+def run(results: list):
+    recs = load_records()
+    for r in recs:
+        rl = r["roofline"]
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: rl[k])
+        results.append((f"roofline_{r['arch']}_{r['shape']}",
+                        rl[dom] * 1e6,
+                        f"bound={rl['bottleneck']} "
+                        f"useful={r['useful_flops_ratio']:.2f}"))
+    if recs:
+        print()
+        print(table())

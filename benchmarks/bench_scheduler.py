@@ -1,0 +1,81 @@
+"""Scheduler benchmarks — the paper's §3.2.3 claims ("scalability, fairness,
+backfill") quantified: scheduling throughput, and utilization/makespan of
+FIFO vs EASY vs conservative backfill on a synthetic trace."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.cluster import Cluster, Node, Partition, ResourceRequest
+
+
+def _cluster(n_nodes=64, mode="easy"):
+    nodes = [Node(name=f"n{i:03d}", cpus=16, mem_mb=65536, gres={"tpu": 4},
+                  coord=(i // 8, i % 8)) for i in range(n_nodes)]
+    parts = [Partition(name="p", nodes=tuple(n.name for n in nodes),
+                       default=True)]
+    return Cluster(nodes, parts, sched_mode=mode)
+
+
+def _trace(rng, n_jobs=200):
+    """Mixed trace: many small short jobs + some wide long ones.  Node
+    counts must tile a rectangle of the 8x8 host grid (TPU contiguity) or
+    they would pend forever."""
+    jobs = []
+    for i in range(n_jobs):
+        wide = rng.random() < 0.2
+        nodes = int(rng.choice([8, 16, 32])) if wide \
+            else int(rng.choice([1, 2, 3, 4]))
+        rt = float(rng.integers(300, 3600)) if wide \
+            else float(rng.integers(30, 600))
+        jobs.append((nodes, rt, int(rng.integers(0, 10))))
+    return jobs
+
+
+def bench_scheduling_throughput(results: list):
+    c = _cluster()
+    rng = np.random.default_rng(0)
+    jobs = _trace(rng, 400)
+    t0 = time.perf_counter()
+    for i, (n, rt, prio) in enumerate(jobs):
+        c.submit(f"j{i}", ResourceRequest(
+            nodes=n, gres_per_node={"tpu": 4}, time_limit_s=7200),
+            run_time_s=rt, priority=prio)
+    n_events = 0
+    while c.tick():
+        n_events += 1
+    dt = time.perf_counter() - t0
+    results.append(("scheduler_submit_and_drain_400_jobs",
+                    dt * 1e6 / 400, f"{400 / dt:,.0f} jobs/s"))
+
+
+def bench_backfill_modes(results: list):
+    """Makespan + utilization per §3.2.3 scheduler mode, same trace."""
+    rng = np.random.default_rng(1)
+    jobs = _trace(rng, 150)
+    out = {}
+    for mode in ("fifo", "easy", "conservative"):
+        c = _cluster(mode=mode)
+        t0 = time.perf_counter()
+        for i, (n, rt, prio) in enumerate(jobs):
+            c.submit(f"j{i}", ResourceRequest(
+                nodes=n, gres_per_node={"tpu": 4}, time_limit_s=7200),
+                run_time_s=rt, priority=prio)
+        stuck = c.run()
+        assert not stuck, f"{mode}: {len(stuck)} jobs never ran"
+        dt = time.perf_counter() - t0
+        makespan = max(r.end for r in c.accounting)
+        busy = sum(r.elapsed * len(r.nodes) for r in c.accounting)
+        util = busy / (makespan * len(c.nodes))
+        out[mode] = (makespan, util)
+        results.append((f"scheduler_makespan_{mode}", dt * 1e6,
+                        f"makespan={makespan:,.0f}s util={util:.1%}"))
+    # backfill must beat FIFO on this trace
+    assert out["easy"][0] <= out["fifo"][0] * 1.001, out
+    return out
+
+
+def run(results: list):
+    bench_scheduling_throughput(results)
+    bench_backfill_modes(results)

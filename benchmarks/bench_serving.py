@@ -1,0 +1,65 @@
+"""Serving benchmarks: batched-decode throughput scaling with slot count
+(the continuous-batching claim), and prefill latency vs prompt length."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.models import init_params
+from repro.serving import DecodeEngine, Request
+
+
+def bench_decode_throughput(results: list):
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(0)
+    out = {}
+    for slots in (1, 4):
+        eng = DecodeEngine(cfg, params, num_slots=slots, cache_len=128)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 16).astype(
+                            np.int32), max_new_tokens=16)
+                for i in range(8)]
+        for r in reqs:
+            eng.submit(r)
+        eng.step()                      # absorb compile time
+        t0 = time.perf_counter()
+        eng.run_to_completion()
+        dt = time.perf_counter() - t0
+        toks = int(eng.metrics.counter("serve_tokens_generated").value())
+        out[slots] = toks / dt
+        results.append((f"decode_throughput_slots{slots}", dt * 1e6,
+                        f"{toks / dt:,.0f} tok/s"))
+    # batching must help
+    assert out[4] > out[1] * 1.3, out
+
+
+def bench_prefill_latency(results: list):
+    import jax.numpy as jnp
+    from repro.configs import RunConfig
+    from repro.models.model import prefill
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    run = RunConfig(remat="none")
+    rng = np.random.default_rng(1)
+    for plen in (32, 128, 512):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, plen)),
+                           jnp.int32)
+        import jax
+        f = jax.jit(lambda p, t: prefill(p, {"tokens": t}, cfg, run,
+                                         cache_len=1024)[0])
+        f(params, toks)                 # compile
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            jax.block_until_ready(f(params, toks))
+        dt = (time.perf_counter() - t0) / reps
+        results.append((f"prefill_latency_p{plen}", dt * 1e6,
+                        f"{plen / dt:,.0f} tok/s"))
+
+
+def run(results: list):
+    bench_decode_throughput(results)
+    bench_prefill_latency(results)

@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/claim:
+  bench_scheduler    §3.2.3  scheduling throughput, FIFO vs backfill
+  bench_parallelism  §7      ZeRO/TP per-device bytes, step wall time
+  bench_serving      §3.2.1  (TensorRT role) decode throughput, prefill
+  bench_kernels      §3.1.2  Pallas kernels vs oracle (interpret)
+  bench_roofline     —       §Roofline table from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV rows plus the roofline table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: scheduler parallelism serving kernels "
+                         "roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        bench_kernels, bench_parallelism, bench_roofline, bench_scheduler,
+        bench_serving,
+    )
+    suites = {
+        "scheduler": bench_scheduler,
+        "parallelism": bench_parallelism,
+        "serving": bench_serving,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    picked = args.only or list(suites)
+    results: list[tuple[str, float, str]] = []
+    t0 = time.perf_counter()
+    for name in picked:
+        mod = suites[name]
+        t = time.perf_counter()
+        mod.run(results)
+        print(f"[suite {name}: {time.perf_counter() - t:.1f}s]",
+              file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in results:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"\n{len(results)} benchmarks in "
+          f"{time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,58 @@
+"""Pipeline parallelism demo (paper §7.1 "PipelineParallel"): a 2-stage
+GPipe-style microbatch schedule over `lax.ppermute`, trained end-to-end, and
+checked against the sequential run.
+
+This script forces 2 host devices (must be set before jax imports), so run
+it as its own process:
+
+    PYTHONPATH=src python examples/pipeline_parallel.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import make_pipeline_mesh, pipeline_apply
+
+
+def main():
+    n_stages, n_micro = 2, 8
+    L, d, mb = 8, 64, 4                       # 8 layers -> 4 per stage
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((L, d, d)) * 0.2, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((n_micro, mb, d)), jnp.float32)
+    tgt = jnp.asarray(rng.standard_normal((n_micro, mb, d)), jnp.float32)
+
+    def stage_fn(params, h):
+        for i in range(params.shape[0]):
+            h = jnp.tanh(h @ params[i])
+        return h
+
+    mesh = make_pipeline_mesh(n_stages)
+    print(f"pipeline mesh: {mesh.shape}  microbatches={n_micro}")
+
+    y = pipeline_apply(stage_fn, w, x, mesh)
+    ref = jnp.stack([stage_fn(w, x[i]) for i in range(n_micro)])
+    err = float(jnp.max(jnp.abs(y - ref)))
+    print(f"forward max |pipeline - sequential| = {err:.2e}")
+    assert err < 1e-5
+
+    # train THROUGH the pipeline (it's differentiable end to end)
+    def loss(w):
+        out = pipeline_apply(stage_fn, w, x, mesh)
+        return jnp.mean((out - tgt) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))    # compile once
+    lval, g = grad_fn(w)
+    print(f"loss={lval:.4f}  grad_norm="
+          f"{float(jnp.linalg.norm(g.reshape(-1))):.4f}")
+    for step in range(10):
+        lval, g = grad_fn(w)
+        w = w - 0.05 * g
+    print(f"after 10 steps: loss={float(loss(w)):.4f} (decreasing)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Dissect per-device flops of a probe program: group dot ops by shape.
+
+Parses the optimized HLO, indexes every instruction's output shape, then
+computes flops per dot from operand/contracting dims.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import math
+import re
+import sys
+from collections import defaultdict
+
+from repro.configs import INPUT_SHAPES, default_run_config, get_config
+from repro.launch import dryrun as D
+from repro.launch.mesh import make_production_mesh
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "starcoder2-3b"
+shape_name = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+groups = int(sys.argv[3]) if len(sys.argv) > 3 else 1
+micro = int(sys.argv[4]) if len(sys.argv) > 4 else 2
+
+mesh = make_production_mesh()
+shape = INPUT_SHAPES[shape_name]
+cfg0 = get_config(arch)
+run = default_run_config(cfg0, shape, batch_divisor=16)
+
+from repro.models.spec import group_period
+P = group_period(cfg0)
+cfg = dataclasses.replace(cfg0, num_layers=P * groups)
+run = dataclasses.replace(run, unroll=True, microbatches=micro)
+print(f"{arch} {shape_name} groups={groups} micro={micro} "
+      f"layers={cfg.num_layers} strategy={run.strategy}")
+
+low = D.lower_step(cfg, run, shape, mesh)
+comp = low.compile()
+cost = comp.cost_analysis()
+print("cost_analysis flops/device:", f"{cost.get('flops', 0):.4g}")
+print("cost_analysis bytes/device:", f"{cost.get('bytes accessed', 0):.4g}")
+
+txt = comp.as_text()
+
+def_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\(?(\w+)\[([\d,]*)\]")
+shape_of: dict[str, list[int]] = {}
+for line in txt.splitlines():
+    m = def_re.match(line)
+    if m:
+        shape_of[m.group(1)] = [int(x) for x in m.group(3).split(",") if x]
+
+dot_line_re = re.compile(r"=\s*\w+\[([\d,]*)\][^=]*?\sdot\(")
+oper_re = re.compile(r"dot\(\s*(?:\w+\[[\d,]*\]\{[\d,]*\}\s+)?%?([\w.\-]+),\s*(?:\w+\[[\d,]*\]\{[\d,]*\}\s+)?%?([\w.\-]+)\s*\)")
+lc_re = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+flops_by_sig = defaultdict(float)
+count_by_sig = defaultdict(int)
+missed = 0
+for line in txt.splitlines():
+    if " dot(" not in line:
+        continue
+    m = dot_line_re.search(line)
+    if not m:
+        continue
+    out_dims = [int(x) for x in m.group(1).split(",") if x]
+    om = oper_re.search(line)
+    lc = lc_re.search(line)
+    if not om or not lc:
+        missed += 1
+        continue
+    lhs_name = om.group(1)
+    lhs_dims = shape_of.get(lhs_name)
+    if lhs_dims is None:
+        missed += 1
+        continue
+    k = 1
+    for d in (int(x) for x in lc.group(1).split(",") if x):
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    fl = 2 * k * math.prod(out_dims) if out_dims else 0
+    sig = f"lhs{lhs_dims} k={k} -> out{out_dims}"
+    flops_by_sig[sig] += fl
+    count_by_sig[sig] += 1
+
+tot = sum(flops_by_sig.values())
+print(f"sum of dot flops: {tot:.4g}  (missed {missed} dot lines)")
+for sig, fl in sorted(flops_by_sig.items(), key=lambda kv: -kv[1])[:25]:
+    print(f"  {fl:11.4g} ({fl/max(tot,1)*100:5.1f}%) n={count_by_sig[sig]:4d}  {sig}")

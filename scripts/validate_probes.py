@@ -1,0 +1,51 @@
+"""Validate dryrun probe-fit extrapolation against full unroll ground truth.
+
+Uses a small mesh (16 devices) and a small config so the FULL program can be
+unrolled and measured directly; compares with the probe fit at the same
+(m, G).  Also prints memory_analysis of the scanned production program to
+audit the temp-bytes accounting.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+import dataclasses
+import jax
+
+from repro.configs import get_config, INPUT_SHAPES, default_run_config
+from repro.launch import dryrun as D
+
+mesh = jax.make_mesh((4, 4), ("data", "model"))
+
+cfg = get_config("starcoder2-3b")
+# shrink so full unroll is tractable: 6 layers, small vocab/batch/seq
+cfg = dataclasses.replace(cfg, num_layers=6, d_model=512, num_heads=8,
+                          num_kv_heads=2, head_dim=64, d_ff=2048,
+                          vocab_size=4096)
+shape = dataclasses.replace(INPUT_SHAPES["train_4k"], seq_len=512,
+                            global_batch=32)
+run = default_run_config(cfg, shape, batch_divisor=4)
+run = dataclasses.replace(run, microbatches=4)
+print("run:", run)
+
+# ground truth: fully unrolled full program
+full = D._probe_metrics(cfg, dataclasses.replace(run, unroll=True), shape, mesh)
+print("FULL-unroll :", {k: f"{v:.4g}" for k, v in full.items()})
+
+# probe fit
+fit = D.probe_costs(cfg, run, shape, mesh)
+print("PROBE-fit   :", {k: f"{v:.4g}" for k, v in fit.items()})
+
+for k in ("flops", "hbm_bytes", "link_bytes"):
+    rel = (fit[k] - full[k]) / max(full[k], 1)
+    print(f"{k:12s} full={full[k]:.4g} fit={fit[k]:.4g} rel_err={rel:+.3%}")
+
+# memory of the scanned production program
+low = D.lower_step(cfg, run, shape, mesh)
+comp = low.compile()
+mem = comp.memory_analysis()
+print("scan prod: arg=%.3g out=%.3g temp=%.3g" % (
+    mem.argument_size_in_bytes, mem.output_size_in_bytes,
+    mem.temp_size_in_bytes))
+cost = comp.cost_analysis()
+print("scan prod flops(once)=%.4g bytes=%.4g" % (
+    cost.get("flops", 0), cost.get("bytes accessed", 0)))

@@ -1,0 +1,132 @@
+"""Sharded checkpointing: manifest + per-leaf .npy shards + step management.
+
+The paper's storage guidance (§3.1.4 — NAS/DFS for "model checkpoints")
+maps to a directory layout any distributed filesystem serves:
+
+    <dir>/step_000100/MANIFEST.json     pytree structure + leaf metadata
+    <dir>/step_000100/<leaf>.npy        one array per pytree leaf
+    <dir>/step_000100/data_state.npz    data-pipeline position
+    <dir>/LATEST                        atomic pointer to the newest step
+
+Writes go to a temp dir and are renamed into place, so a crash mid-save
+never corrupts the LATEST checkpoint (the property the guide's "save your
+checkpoints to NAS" advice exists to protect).  ``keep`` bounds disk use.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Optional
+
+import jax
+import numpy as np
+
+_LEAF_RE = re.compile(r"[^\w.-]+")
+
+
+def _leaf_name(path) -> str:
+    return _LEAF_RE.sub("_", jax.tree_util.keystr(path)).strip("_")
+
+
+def save(directory: str, step: int, tree, data_state: Optional[dict] = None,
+         keep: int = 3) -> str:
+    """Save a pytree checkpoint; returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    final = os.path.join(directory, name)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=f".{name}.tmp")
+    try:
+        manifest = {"step": step, "treedef": None, "leaves": []}
+        names = []
+        for path, leaf in flat:
+            nm = _leaf_name(path)
+            assert nm not in names, f"leaf name collision: {nm}"
+            names.append(nm)
+            arr = np.asarray(leaf)
+            dtype_name = str(arr.dtype)
+            if dtype_name == "bfloat16":        # np.save can't cast ml_dtypes
+                np.save(os.path.join(tmp, nm + ".npy"),
+                        arr.view(np.uint16))
+            else:
+                np.save(os.path.join(tmp, nm + ".npy"), arr)
+            manifest["leaves"].append(
+                {"name": nm, "shape": list(arr.shape), "dtype": dtype_name})
+        # treedef round-trips through the same tree structure: store key paths
+        manifest["treedef"] = [_leaf_name(p) for p, _ in flat]
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if data_state is not None:
+            np.savez(os.path.join(tmp, "data_state.npz"), **data_state)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _write_latest(directory, name)
+    _gc(directory, keep)
+    return final
+
+
+def _write_latest(directory: str, name: str):
+    tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(name)
+    os.rename(tmp, os.path.join(directory, "LATEST"))
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    try:
+        with open(os.path.join(directory, "LATEST")) as f:
+            return int(f.read().strip().split("_")[1])
+    except (FileNotFoundError, IndexError, ValueError):
+        return None
+
+
+def restore(directory: str, tree_like, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``tree_like`` (ShapeDtypeStructs ok).
+
+    Returns (tree, data_state|None).  With ``shardings`` the arrays are
+    device_put per-leaf to the target sharding (resharding restore).
+    """
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoint under {directory}"
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    names = [_leaf_name(p) for p, _ in flat]
+    assert names == manifest["treedef"], (
+        "checkpoint tree mismatch:\n"
+        f"  want {names[:5]}...\n  have {manifest['treedef'][:5]}...")
+    sh_flat = (jax.tree_util.tree_flatten(shardings)[0]
+               if shardings is not None else [None] * len(flat))
+    stored_dtype = {l["name"]: l["dtype"] for l in manifest["leaves"]}
+    leaves = []
+    for (p, like), sh in zip(flat, sh_flat):
+        nm = _leaf_name(p)
+        arr = np.load(os.path.join(path, nm + ".npy"))
+        if stored_dtype.get(nm) == "bfloat16":   # stored as a uint16 view
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        want_dtype = getattr(like, "dtype", arr.dtype)
+        arr = arr.astype(want_dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    ds_path = os.path.join(path, "data_state.npz")
+    data_state = dict(np.load(ds_path, allow_pickle=False)) \
+        if os.path.exists(ds_path) else None
+    return tree, data_state

@@ -1,0 +1,18 @@
+"""Software-defined SLURM/DeepOps cluster: inventory, scheduler, job
+lifecycle, SLURM command surface, provisioning + validation, Mesh bridge."""
+from repro.cluster.cluster import AccountingRecord, Cluster
+from repro.cluster.job import (
+    Dependency, DependencyKind, Job, JobState, ResourceRequest,
+)
+from repro.cluster.node import Node, NodeState, Partition
+from repro.cluster.provision import (
+    ClusterSpec, HostSpec, PartitionSpec, provision, tpu_pod_spec, validate,
+)
+from repro.cluster import commands
+
+__all__ = [
+    "AccountingRecord", "Cluster", "Dependency", "DependencyKind", "Job",
+    "JobState", "ResourceRequest", "Node", "NodeState", "Partition",
+    "ClusterSpec", "HostSpec", "PartitionSpec", "provision", "tpu_pod_spec",
+    "validate", "commands",
+]

@@ -1,0 +1,288 @@
+"""The cluster engine: inventory + job table + virtual clock + event loop.
+
+Deterministic discrete-event simulation of a SLURM-managed TPU cluster.
+`sbatch`-style submission enqueues jobs; `tick()` advances the clock to the
+next event (job end), releases resources, resolves dependencies, and runs a
+scheduling pass.  Jobs carrying a real ``script`` callable execute it at
+start time — this is how the examples launch actual JAX work through the
+Mesh bridge.
+
+HA (paper §4 step 3 note on ``slurm_enable_ha``): the full controller state
+serializes to a dict (``snapshot()``) and a standby controller restores from
+it (``Cluster.restore``) — the failover test proves no job state is lost.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.cluster.job import (
+    Dependency, DependencyKind, Job, JobState, ResourceRequest,
+)
+from repro.cluster.node import Node, NodeState, Partition
+from repro.cluster.scheduler import Decision, schedule_pass
+
+
+@dataclass
+class AccountingRecord:
+    """One sacct row."""
+    job_id: int
+    name: str
+    user: str
+    partition: str
+    submit: float
+    start: Optional[float]
+    end: Optional[float]
+    state: str
+    nodes: tuple[str, ...]
+    elapsed: float
+    exit_code: Optional[int]
+
+
+class Cluster:
+    """Software-defined SLURM cluster (controller + inventory)."""
+
+    def __init__(self, nodes: list[Node], partitions: list[Partition],
+                 sched_mode: str = "easy", real_mode: bool = False):
+        self.nodes: dict[str, Node] = {n.name: n for n in nodes}
+        self.partitions: dict[str, Partition] = {p.name: p for p in partitions}
+        for p in partitions:
+            for nm in p.nodes:
+                assert nm in self.nodes, f"partition {p.name}: unknown {nm}"
+        self.sched_mode = sched_mode
+        self.real_mode = real_mode
+        self.clock: float = 0.0
+        self.jobs: dict[int, Job] = {}
+        self.accounting: list[AccountingRecord] = []
+        self._next_id = itertools.count(1)
+        self.metrics = None            # optional monitoring registry hook
+
+    # ------------------------------------------------------------ submit ----
+    def default_partition(self) -> str:
+        for p in self.partitions.values():
+            if p.default:
+                return p.name
+        return next(iter(self.partitions))
+
+    def submit(self, name: str, req: ResourceRequest, user: str = "ubuntu",
+               partition: Optional[str] = None, priority: int = 0,
+               run_time_s: float = 60.0, script: Optional[Callable] = None,
+               dependency: str = "", array: int = 0,
+               comment: str = "") -> list[int]:
+        """sbatch.  Returns job id(s) (``array > 0`` submits an array)."""
+        partition = partition or self.default_partition()
+        if partition not in self.partitions:
+            raise ValueError(f"invalid partition {partition!r}")
+        if req.time_limit_s > self.partitions[partition].max_time_s:
+            raise ValueError(
+                f"time limit {req.time_limit_s}s exceeds partition max "
+                f"{self.partitions[partition].max_time_s}s")
+        deps = tuple(Dependency.parse(dependency)) if dependency else ()
+        for d in deps:
+            if d.job_id not in self.jobs:
+                raise ValueError(f"dependency on unknown job {d.job_id}")
+        n = max(array, 1)
+        ids = []
+        for i in range(n):
+            jid = next(self._next_id)
+            job = Job(
+                job_id=jid, name=name, user=user, partition=partition,
+                req=req, priority=priority, submit_time=self.clock,
+                run_time_s=run_time_s, script=script, dependencies=deps,
+                array_index=i if array else None, comment=comment)
+            self._refresh_dependency(job)
+            self.jobs[jid] = job
+            ids.append(jid)
+        self.schedule()
+        return ids
+
+    def cancel(self, job_id: int):
+        """scancel."""
+        job = self.jobs[job_id]
+        if job.state.finished:
+            return
+        if job.state == JobState.RUNNING:
+            self._finish(job, JobState.CANCELLED)
+        else:
+            job.state = JobState.CANCELLED
+            job.end_time = self.clock
+            self._account(job)
+        self.schedule()
+
+    def update_job(self, job_id: int, **kwargs):
+        """scontrol update job — only pending jobs may change resources."""
+        job = self.jobs[job_id]
+        if "priority" in kwargs:
+            job.priority = int(kwargs.pop("priority"))
+        if kwargs and job.state != JobState.PENDING:
+            raise ValueError("cannot modify a non-pending job's resources")
+        for k, v in kwargs.items():
+            setattr(job, k, v)
+        self.schedule()
+
+    def set_node_state(self, name: str, state: NodeState, reason: str = ""):
+        """scontrol update nodename=... state=... (drain/down/resume)."""
+        node = self.nodes[name]
+        node.set_state(state, reason)
+        if state == NodeState.DOWN:
+            # requeue jobs that lost their node (SLURM requeues on failure)
+            for jid in list(node.running_jobs):
+                job = self.jobs[jid]
+                self._release_nodes(job)
+                job.state = JobState.PENDING
+                job.reason = "BeginTime"
+                job.start_time = None
+                job.nodes_alloc = ()
+        self.schedule()
+
+    # --------------------------------------------------------- scheduling ----
+    def _pending(self) -> list[Job]:
+        return [j for j in self.jobs.values() if j.state == JobState.PENDING]
+
+    def _running(self) -> list[Job]:
+        return [j for j in self.jobs.values() if j.state == JobState.RUNNING]
+
+    def _refresh_dependency(self, job: Job):
+        """Update the Dependency gate / fail jobs with impossible deps."""
+        blocked = False
+        for d in job.dependencies:
+            dep = self.jobs.get(d.job_id)
+            if dep is None:
+                continue
+            if d.kind == DependencyKind.AFTEROK:
+                if dep.state.finished and not dep.state.ok:
+                    job.state = JobState.CANCELLED   # DependencyNeverSatisfied
+                    job.end_time = self.clock
+                    job.reason = "DependencyNeverSatisfied"
+                    self._account(job)
+                    return
+                blocked |= not dep.state.ok
+            elif d.kind == DependencyKind.AFTERNOTOK:
+                if dep.state.ok:
+                    job.state = JobState.CANCELLED
+                    job.end_time = self.clock
+                    job.reason = "DependencyNeverSatisfied"
+                    self._account(job)
+                    return
+                blocked |= not dep.state.finished
+            elif d.kind == DependencyKind.AFTERANY:
+                blocked |= not dep.state.finished
+            elif d.kind == DependencyKind.AFTER:
+                blocked |= dep.start_time is None
+        job.reason = "Dependency" if blocked else "Priority"
+
+    def schedule(self) -> Decision:
+        for job in self._pending():
+            self._refresh_dependency(job)
+        decision = schedule_pass(
+            self.clock, self._pending(), self._running(), self.nodes,
+            self.partitions, self.sched_mode)
+        for job_id, alloc in decision.starts:
+            self._start(self.jobs[job_id], alloc)
+        for res in decision.reservations:
+            job = self.jobs.get(res.job_id)
+            if job and job.state == JobState.PENDING:
+                job.reason = "Resources"
+        if self.metrics is not None:
+            self.metrics.gauge("slurm_jobs_pending").set(len(self._pending()))
+            self.metrics.gauge("slurm_jobs_running").set(len(self._running()))
+        return decision
+
+    def _start(self, job: Job, alloc: tuple[str, ...]):
+        for nm in alloc:
+            self.nodes[nm].allocate(job.job_id, job.req.cpus_per_node,
+                                    job.req.mem_mb_per_node,
+                                    job.req.gres_per_node)
+        job.state = JobState.RUNNING
+        job.start_time = self.clock
+        job.nodes_alloc = alloc
+        job.reason = ""
+        if self.real_mode and job.script is not None:
+            try:
+                job.result = job.script(job, alloc)
+                job.exit_code = 0
+            except Exception as e:              # noqa: BLE001 — job failure
+                job.exit_code = 1
+                job.comment = f"{type(e).__name__}: {e}"
+
+    def _release_nodes(self, job: Job):
+        for nm in job.nodes_alloc:
+            self.nodes[nm].release(job.job_id, job.req.cpus_per_node,
+                                   job.req.mem_mb_per_node,
+                                   job.req.gres_per_node)
+
+    def _finish(self, job: Job, state: JobState):
+        self._release_nodes(job)
+        job.state = state
+        job.end_time = self.clock
+        if job.exit_code is None:
+            job.exit_code = 0 if state == JobState.COMPLETED else 1
+        self._account(job)
+
+    def _account(self, job: Job):
+        self.accounting.append(AccountingRecord(
+            job.job_id, job.name, job.user, job.partition, job.submit_time,
+            job.start_time, job.end_time, job.state.name,
+            job.nodes_alloc,
+            (job.end_time - job.start_time) if job.start_time is not None
+            and job.end_time is not None else 0.0,
+            job.exit_code))
+
+    # -------------------------------------------------------- event loop ----
+    def next_event_time(self) -> Optional[float]:
+        ends = [j.start_time + j.runtime() for j in self._running()]
+        return min(ends) if ends else None
+
+    def tick(self) -> bool:
+        """Advance to the next job-end event.  False if nothing to do."""
+        t = self.next_event_time()
+        if t is None:
+            return False
+        self.clock = t
+        for job in self._running():
+            if job.start_time + job.runtime() <= self.clock + 1e-9:
+                if job.real_failed():
+                    self._finish(job, JobState.FAILED)
+                elif job.will_timeout():
+                    self._finish(job, JobState.TIMEOUT)
+                else:
+                    self._finish(job, JobState.COMPLETED)
+        self.schedule()
+        return True
+
+    def run(self, max_events: int = 100_000):
+        """Run until the queue drains (or the event budget is spent)."""
+        for _ in range(max_events):
+            if not self.tick():
+                break
+        stuck = [j.job_id for j in self._pending()]
+        return stuck
+
+    # ------------------------------------------------------------- HA -------
+    def snapshot(self) -> dict:
+        """Serializable controller state (for HA failover)."""
+        import copy
+        return {
+            "clock": self.clock,
+            "jobs": copy.deepcopy(self.jobs),
+            "nodes": copy.deepcopy(self.nodes),
+            "accounting": copy.deepcopy(self.accounting),
+            "next_id": next(self._next_id),
+            "sched_mode": self.sched_mode,
+            "partitions": list(self.partitions.values()),
+        }
+
+    @classmethod
+    def restore(cls, snap: dict) -> "Cluster":
+        c = cls.__new__(cls)
+        c.nodes = snap["nodes"]
+        c.partitions = {p.name: p for p in snap["partitions"]}
+        c.sched_mode = snap["sched_mode"]
+        c.real_mode = False
+        c.clock = snap["clock"]
+        c.jobs = snap["jobs"]
+        c.accounting = snap["accounting"]
+        c._next_id = itertools.count(snap["next_id"])
+        c.metrics = None
+        return c

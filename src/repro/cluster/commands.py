@@ -1,0 +1,225 @@
+"""The SLURM user-command surface from paper §5.2.1: sinfo, squeue, sbatch,
+srun, salloc, scancel, scontrol, sacct — each returns the formatted text a
+user would see, against a :class:`Cluster`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.cluster.cluster import Cluster
+from repro.cluster.job import Job, JobState, ResourceRequest
+from repro.cluster.node import NodeState
+
+
+def _fmt_time(seconds: Optional[float]) -> str:
+    if seconds is None:
+        return "N/A"
+    s = int(seconds)
+    d, s = divmod(s, 86_400)
+    h, s = divmod(s, 3_600)
+    m, s = divmod(s, 60)
+    if d:
+        return f"{d}-{h:02d}:{m:02d}:{s:02d}"
+    return f"{h:02d}:{m:02d}:{s:02d}"
+
+
+def _compress(names) -> str:
+    return ",".join(names) if names else ""
+
+
+def sinfo(cluster: Cluster, partition: Optional[str] = None,
+          node_oriented: bool = False, summarize: bool = False) -> str:
+    """`sinfo` / `sinfo -N` / `sinfo -s`."""
+    rows = []
+    parts = ([cluster.partitions[partition]] if partition
+             else list(cluster.partitions.values()))
+    if node_oriented:
+        rows.append(f"{'NODELIST':<14}{'PARTITION':<12}{'STATE':<8}"
+                    f"{'CPUS':<6}{'GRES':<12}{'FREE_GRES':<10}")
+        for p in parts:
+            for nm in p.nodes:
+                n = cluster.nodes[nm]
+                gres = ",".join(f"{g}:{c}" for g, c in n.gres.items())
+                free = ",".join(f"{g}:{n.free_gres(g)}" for g in n.gres)
+                rows.append(f"{n.name:<14}{p.name:<12}{n.state.value:<8}"
+                            f"{n.cpus:<6}{gres:<12}{free:<10}")
+        return "\n".join(rows)
+    rows.append(f"{'PARTITION':<12}{'AVAIL':<7}{'TIMELIMIT':<12}"
+                f"{'NODES':<7}{'STATE':<8}NODELIST")
+    for p in parts:
+        by_state: dict[NodeState, list[str]] = {}
+        for nm in p.nodes:
+            by_state.setdefault(cluster.nodes[nm].state, []).append(nm)
+        if summarize:
+            alive = sum(len(v) for s, v in by_state.items()
+                        if s != NodeState.DOWN)
+            rows.append(f"{p.name + ('*' if p.default else ''):<12}"
+                        f"{'up':<7}{_fmt_time(p.max_time_s):<12}"
+                        f"{alive}/{len(p.nodes):<6}{'mixed':<8}")
+            continue
+        for state, names in sorted(by_state.items(), key=lambda kv: kv[0].value):
+            rows.append(f"{p.name + ('*' if p.default else ''):<12}"
+                        f"{'up':<7}{_fmt_time(p.max_time_s):<12}"
+                        f"{len(names):<7}{state.value:<8}{_compress(names)}")
+    return "\n".join(rows)
+
+
+def squeue(cluster: Cluster, user: Optional[str] = None,
+           states: Optional[list[str]] = None,
+           partition: Optional[str] = None) -> str:
+    """`squeue [-u user] [-t states] [-p partition]`."""
+    rows = [f"{'JOBID':<8}{'PARTITION':<12}{'NAME':<20}{'USER':<10}"
+            f"{'ST':<4}{'TIME':<12}{'NODES':<7}NODELIST(REASON)"]
+    for job in sorted(cluster.jobs.values(), key=Job.sort_key):
+        if job.state.finished:
+            continue
+        if user and job.user != user:
+            continue
+        if partition and job.partition != partition:
+            continue
+        if states and job.state.value not in states:
+            continue
+        elapsed = (cluster.clock - job.start_time
+                   if job.start_time is not None else 0)
+        where = (_compress(job.nodes_alloc) if job.nodes_alloc
+                 else f"({job.reason})")
+        nm = job.name if job.array_index is None else \
+            f"{job.name}[{job.array_index}]"
+        rows.append(f"{job.job_id:<8}{job.partition:<12}{nm[:19]:<20}"
+                    f"{job.user:<10}{job.state.value:<4}"
+                    f"{_fmt_time(elapsed):<12}{job.req.nodes:<7}{where}")
+    return "\n".join(rows)
+
+
+def sbatch(cluster: Cluster, name: str = "job", nodes: int = 1,
+           gres: str = "", cpus_per_task: int = 1, mem: str = "1G",
+           time: str = "01:00:00", partition: Optional[str] = None,
+           dependency: str = "", array: int = 0, priority: int = 0,
+           run_time_s: float = 60.0, script=None, user: str = "ubuntu") -> str:
+    """`sbatch` with the guide's §5.2.4 options.  Returns the SLURM message."""
+    req = ResourceRequest(
+        nodes=nodes,
+        gres_per_node=_parse_gres(gres),
+        cpus_per_node=cpus_per_task,
+        mem_mb_per_node=_parse_mem(mem),
+        time_limit_s=_parse_time(time),
+    )
+    ids = cluster.submit(name, req, user=user, partition=partition,
+                         priority=priority, run_time_s=run_time_s,
+                         script=script, dependency=dependency, array=array)
+    if array:
+        return f"Submitted batch job {ids[0]} (array {len(ids)} tasks)"
+    return f"Submitted batch job {ids[0]}"
+
+
+def srun(cluster: Cluster, script, name: str = "interactive", nodes: int = 1,
+         gres: str = "tpu:4", time: str = "01:00:00",
+         partition: Optional[str] = None, user: str = "ubuntu"):
+    """`srun` — submit, run the queue until this job finishes, return its
+    result (the interactive analogue of §5.2.2)."""
+    req = ResourceRequest(nodes=nodes, gres_per_node=_parse_gres(gres),
+                          time_limit_s=_parse_time(time))
+    jid = cluster.submit(name, req, user=user, partition=partition,
+                         script=script, run_time_s=1.0)[0]
+    while not cluster.jobs[jid].state.finished:
+        if not cluster.tick():
+            break
+    job = cluster.jobs[jid]
+    if job.state != JobState.COMPLETED:
+        raise RuntimeError(
+            f"srun job {jid} {job.state.name}: {job.comment}")
+    return job.result
+
+
+salloc = srun     # salloc differs only in shell semantics; same allocation path
+
+
+def scancel(cluster: Cluster, job_id: int) -> str:
+    cluster.cancel(job_id)
+    return f"scancel: job {job_id}"
+
+
+def scontrol_show_job(cluster: Cluster, job_id: int) -> str:
+    j = cluster.jobs[job_id]
+    return (f"JobId={j.job_id} JobName={j.name} UserId={j.user} "
+            f"Priority={j.priority} Partition={j.partition} "
+            f"JobState={j.state.name} Reason={j.reason or 'None'} "
+            f"NumNodes={j.req.nodes} "
+            f"TRES=cpu={j.req.cpus_per_node},mem={j.req.mem_mb_per_node}M,"
+            + ",".join(f"gres/{g}={n}" for g, n in
+                       j.req.gres_per_node.items())
+            + f" TimeLimit={_fmt_time(j.req.time_limit_s)} "
+            f"NodeList={_compress(j.nodes_alloc) or '(null)'} "
+            f"SubmitTime={j.submit_time:.0f} "
+            f"StartTime={j.start_time if j.start_time is not None else 'N/A'} "
+            f"EndTime={j.end_time if j.end_time is not None else 'N/A'}")
+
+
+def scontrol_show_nodes(cluster: Cluster) -> str:
+    rows = []
+    for n in cluster.nodes.values():
+        gres = ",".join(f"{g}:{c}" for g, c in n.gres.items())
+        rows.append(
+            f"NodeName={n.name} State={n.state.name} CPUTot={n.cpus} "
+            f"CPUAlloc={n.alloc_cpus} RealMemory={n.mem_mb} "
+            f"AllocMem={n.alloc_mem_mb} Gres={gres} "
+            f"Coord={n.coord} Reason={n.reason or 'None'}")
+    return "\n".join(rows)
+
+
+def scontrol_update_node(cluster: Cluster, nodename: str, state: str,
+                         reason: str = "") -> str:
+    cluster.set_node_state(nodename, NodeState[state.upper()], reason)
+    return f"scontrol: node {nodename} -> {state}"
+
+
+def sacct(cluster: Cluster, user: Optional[str] = None) -> str:
+    rows = [f"{'JobID':<8}{'JobName':<20}{'Partition':<12}{'State':<12}"
+            f"{'Elapsed':<12}{'NNodes':<8}{'ExitCode':<8}"]
+    for r in cluster.accounting:
+        if user and r.user != user:
+            continue
+        rows.append(f"{r.job_id:<8}{r.name[:19]:<20}{r.partition:<12}"
+                    f"{r.state:<12}{_fmt_time(r.elapsed):<12}"
+                    f"{len(r.nodes):<8}{r.exit_code}:0")
+    return "\n".join(rows)
+
+
+# ------------------------------------------------------------- parsing ------
+
+def _parse_gres(text: str) -> dict:
+    """``tpu:4`` or ``gpu:2,tpu:4`` -> {"tpu": 4, ...}."""
+    out = {}
+    if not text:
+        return out
+    for part in text.split(","):
+        name, _, count = part.partition(":")
+        out[name.strip()] = int(count or 1)
+    return out
+
+
+def _parse_mem(text: str) -> int:
+    """``32G`` / ``512M`` -> MB."""
+    text = text.strip().upper()
+    if text.endswith("G"):
+        return int(float(text[:-1]) * 1024)
+    if text.endswith("M"):
+        return int(float(text[:-1]))
+    return int(text)
+
+
+def _parse_time(text: str) -> int:
+    """``D-HH:MM:SS`` / ``HH:MM:SS`` / ``MM:SS`` / minutes -> seconds."""
+    text = text.strip()
+    days = 0
+    if "-" in text:
+        d, text = text.split("-", 1)
+        days = int(d)
+    parts = [int(p) for p in text.split(":")]
+    if len(parts) == 3:
+        h, m, s = parts
+    elif len(parts) == 2:
+        h, (m, s) = 0, parts
+    else:
+        h, m, s = 0, parts[0], 0
+    return days * 86_400 + h * 3_600 + m * 60 + s

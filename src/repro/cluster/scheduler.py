@@ -1,0 +1,162 @@
+"""The SLURM scheduling policy: priority queue + EASY/conservative backfill.
+
+This is the paper's §3.2.3 artifact ("Slurm: scalability, fairness policies")
+implemented as a deterministic, property-testable engine:
+
+* **Priority order** — pending jobs sorted by (priority desc, submit FIFO).
+* **Backfill** — when the head job can't start, it gets a *reservation* at
+  the earliest projected time it fits (from running jobs' expected ends).
+  Lower-priority jobs may start out of order only if they cannot delay a
+  reservation (finish before it starts, or touch disjoint nodes).
+  ``mode="easy"`` reserves for the first blocked job only (SLURM's default
+  sched/backfill behaviour); ``mode="conservative"`` reserves for every
+  blocked job.
+* **TPU contiguity** — allocations must tile a rectangle of hosts in the
+  pod's host grid (GPUs don't have this constraint; TPU ICI does).
+
+Pure policy: given cluster state, produce decisions.  The event engine in
+``cluster.py`` applies them.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.cluster.job import Job, JobState
+from repro.cluster.node import Node, NodeState, Partition
+
+
+@dataclass(frozen=True)
+class Reservation:
+    job_id: int
+    start: float
+    nodes: tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class Decision:
+    """One scheduling pass outcome."""
+    starts: tuple[tuple[int, tuple[str, ...]], ...]  # (job_id, nodes)
+    reservations: tuple[Reservation, ...]
+
+
+def _rect_candidates(nodes: list[Node], count: int):
+    """All host-grid rectangles of exactly `count` nodes from `nodes`.
+
+    Nodes without coordinates fall back to arbitrary combinations (non-TPU
+    partitions).  Yields tuples of node names.
+    """
+    coords = {n.coord: n for n in nodes if n.coord is not None}
+    if not coords or len(coords) < count:
+        if len(nodes) >= count:
+            yield tuple(n.name for n in nodes[:count])
+        return
+    rows = sorted({c[0] for c in coords})
+    cols = sorted({c[1] for c in coords})
+    # factor pairs h x w == count
+    for h in range(1, count + 1):
+        if count % h:
+            continue
+        w = count // h
+        for r0 in rows:
+            for c0 in cols:
+                rect = [(r0 + dr, c0 + dc)
+                        for dr in range(h) for dc in range(w)]
+                if all(rc in coords for rc in rect):
+                    yield tuple(coords[rc].name for rc in rect)
+
+
+def find_allocation(job: Job, nodes: dict[str, Node],
+                    partition: Partition) -> Optional[tuple[str, ...]]:
+    """Nodes that can run `job` right now, or None."""
+    req = job.req
+    avail = [
+        nodes[nm] for nm in partition.nodes
+        if nodes[nm].fits(req.cpus_per_node, req.mem_mb_per_node,
+                          req.gres_per_node)
+    ]
+    if len(avail) < req.nodes:
+        return None
+    if req.contiguous:
+        for cand in _rect_candidates(avail, req.nodes):
+            return cand
+        return None
+    return tuple(n.name for n in avail[:req.nodes])
+
+
+def _projected_allocation(job: Job, nodes: dict[str, Node],
+                          partition: Partition, running: list[Job],
+                          now: float) -> Optional[Reservation]:
+    """Earliest-start reservation from projected job-end releases."""
+    # replay releases in end-time order on a copy of the free state
+    import copy
+    shadow = {nm: copy.deepcopy(nodes[nm]) for nm in partition.nodes}
+    events = sorted(
+        ((j.start_time + j.runtime(), j.job_id, j) for j in running
+         if j.start_time is not None),
+        key=lambda t: t[:2])          # job_id tiebreak: Jobs don't order
+    events = [(when, j) for when, _, j in events]
+    # try now, then after each release
+    t = now
+    for when, ending in itertools.chain([(now, None)], events):
+        if ending is not None:
+            for nm in ending.nodes_alloc:
+                if nm in shadow:
+                    shadow[nm].release(
+                        ending.job_id, ending.req.cpus_per_node,
+                        ending.req.mem_mb_per_node, ending.req.gres_per_node)
+            t = when
+        alloc = find_allocation(job, shadow, partition)
+        if alloc is not None:
+            return Reservation(job.job_id, t, alloc)
+    return None
+
+
+def schedule_pass(now: float, pending: list[Job], running: list[Job],
+                  nodes: dict[str, Node], partitions: dict[str, Partition],
+                  mode: str = "easy") -> Decision:
+    """One scheduling cycle.  Mutates nothing; returns the decision."""
+    assert mode in ("easy", "conservative", "fifo")
+    queue = sorted((j for j in pending if j.state == JobState.PENDING
+                    and j.reason != "Dependency"), key=Job.sort_key)
+    # partition priority tier outranks job priority (SLURM PriorityTier)
+    queue.sort(key=lambda j: -partitions[j.partition].priority_tier)
+
+    starts: list[tuple[int, tuple[str, ...]]] = []
+    reservations: list[Reservation] = []
+    # working copy of node state so successive starts see earlier ones
+    import copy
+    work = {nm: copy.deepcopy(n) for nm, n in nodes.items()}
+    run_proj = list(running)
+
+    for job in queue:
+        part = partitions[job.partition]
+        alloc = find_allocation(job, work, part)
+        if alloc is not None:
+            # backfill guard: starting now must not delay any reservation
+            end = now + job.runtime()
+            conflict = any(
+                end > r.start and set(alloc) & set(r.nodes)
+                for r in reservations)
+            if not conflict:
+                starts.append((job.job_id, alloc))
+                for nm in alloc:
+                    work[nm].allocate(job.job_id, job.req.cpus_per_node,
+                                      job.req.mem_mb_per_node,
+                                      job.req.gres_per_node)
+                # projected running job for later reservations
+                proj = copy.copy(job)
+                proj.start_time = now
+                proj.nodes_alloc = alloc
+                run_proj.append(proj)
+                continue
+        if mode == "fifo":
+            break                       # strict FIFO: head blocks the queue
+        if mode == "easy" and reservations:
+            continue                    # EASY: only the first blocked job
+        res = _projected_allocation(job, work, part, run_proj, now)
+        if res is not None:
+            reservations.append(res)
+
+    return Decision(tuple(starts), tuple(reservations))

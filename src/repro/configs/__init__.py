@@ -1,0 +1,20 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    LONG_CONTEXT_WINDOW,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    RunConfig,
+    SSMConfig,
+    default_run_config,
+    get_config,
+    get_reduced_config,
+    shape_for,
+)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "LONG_CONTEXT_WINDOW", "InputShape",
+    "ModelConfig", "MoEConfig", "RunConfig", "SSMConfig",
+    "default_run_config", "get_config", "get_reduced_config", "shape_for",
+]

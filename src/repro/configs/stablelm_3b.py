@@ -1,0 +1,27 @@
+"""StableLM-3B — dense MHA. [hf:stabilityai/stablelm-2-1_6b family]
+
+32L d_model=2560 32H (kv=32) d_ff=6912 vocab=50304.
+"""
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    source="hf:stabilityai/stablelm-2-1_6b",
+    num_layers=32,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=50304,
+)
+
+
+def reduced() -> ModelConfig:
+    return replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=4,
+        head_dim=64, d_ff=512, vocab_size=512,
+    )

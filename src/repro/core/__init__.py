@@ -1,0 +1,7 @@
+"""The paper's parallelism catalog (§2.4, §7) as a composable JAX engine:
+strategies -> sharding rules -> GSPMD; ZeRO stages; shard_map pipeline."""
+from repro.core.parallelism import STRATEGIES, Strategy, get_strategy
+from repro.core import pipeline, sharding, zero
+
+__all__ = ["STRATEGIES", "Strategy", "get_strategy", "sharding", "zero",
+           "pipeline"]

@@ -1,0 +1,47 @@
+"""Activation sharding constraints, logical-name based.
+
+GSPMD propagates shardings from jit boundaries inward; for under-constrained
+programs (notably GQA attention with head counts not divisible by the model
+axis) the propagation can pick pathological layouts — measured on
+starcoder2-3b/train_4k: batch *replicated* and the (g, s) score dims sharded,
+costing ~20x the useful flops per device.  The fix is the standard MaxText
+practice: pin every major activation with ``with_sharding_constraint``.
+
+Model code stays mesh-agnostic: it calls ``constrain(x, "<logical name>")``
+and this module resolves the name against the active rule set (a contextvar
+installed by the step builders while tracing).  Outside any rule context
+(unit tests, CPU smoke runs) ``constrain`` is the identity.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable, Optional
+
+import jax
+
+Rules = Callable[[str, tuple], Optional[object]]   # (name, shape) -> sharding
+
+_RULES: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "repro_act_sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: Optional[Rules]):
+    """Install activation-sharding rules for code traced inside the block."""
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Constrain activation ``x`` per the active rules (identity if none)."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    sh = rules(name, tuple(x.shape))
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

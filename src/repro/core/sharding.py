@@ -1,0 +1,276 @@
+"""Logical-axis -> mesh-axis mapping: build NamedSharding pytrees for
+params, optimizer state, batches and decode caches.
+
+Divisibility policy (see DESIGN.md): a dim is sharded on a mesh axis only if
+its size divides evenly; otherwise the next candidate (or replication) is
+chosen — mirroring what real deployments do when e.g. GQA kv_heads < TP.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.parallelism import (
+    NEVER_SHARD, TP_AXIS_PRIORITY, Strategy, get_strategy,
+)
+from repro.models.spec import ParamSpec, model_spec
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_partition(mesh: Mesh, global_batch: int,
+                    strategy: Strategy) -> Optional[tuple[str, ...]]:
+    """Mesh axes carrying the batch dim (longest divisible prefix-product)."""
+    axes = [a for a in strategy.batch_axes if a in mesh.axis_names]
+    while axes:
+        total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if global_batch % total == 0:
+            return tuple(axes)
+        axes.pop(0)          # drop the outermost ("pod") first
+    return None
+
+
+def param_pspec(ps: ParamSpec, mesh: Mesh, strategy: Strategy,
+                fsdp_override: Optional[bool] = None) -> P:
+    """PartitionSpec for one parameter from its logical axes."""
+    spec: list = [None] * len(ps.shape)
+    model_n = _axis_size(mesh, "model")
+    fsdp = strategy.fsdp if fsdp_override is None else fsdp_override
+
+    # ---- tensor/expert parallelism on `model`, by priority ----
+    if strategy.tp and model_n > 1:
+        for logical in TP_AXIS_PRIORITY:
+            placed = False
+            for i, (ax, n) in enumerate(zip(ps.axes, ps.shape)):
+                if ax == logical and n % model_n == 0 and spec[i] is None:
+                    spec[i] = "model"
+                    placed = True
+                    break
+            if placed:
+                break
+
+    # ---- ZeRO-3 / FSDP storage sharding on the batch axes (largest free
+    # dim).  Multi-pod meshes shard over ("pod", "data") — ZeRO across the
+    # DCN as well as within the pod, which is what makes a 398B model's
+    # f32 master + optimizer state fit 512 chips at all. ----
+    data_n = _axis_size(mesh, "data")
+    pod_n = _axis_size(mesh, "pod") if "pod" in mesh.axis_names else 1
+    groups = []
+    if pod_n > 1:
+        groups.append((("pod", "data"), pod_n * data_n))
+    groups.append((("data",), data_n))
+    for axes, total in groups:
+        if not fsdp or total <= 1:
+            continue
+        cands = [
+            (n, i) for i, (ax, n) in enumerate(zip(ps.axes, ps.shape))
+            if spec[i] is None and ax not in NEVER_SHARD
+            and n % total == 0 and n >= total
+        ]
+        if cands:
+            _, i = max(cands)
+            spec[i] = axes if len(axes) > 1 else axes[0]
+            break
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, run: RunConfig):
+    """NamedSharding pytree matching the parameter pytree.
+
+    ZeRO stage semantics (paper §7.2): stage 3 shards parameters themselves;
+    stages 1/2 keep parameters data-replicated (TP still applies) and shard
+    only optimizer state (and, for 2, gradients) — see ``opt_shardings`` /
+    ``grad_shardings``.
+    """
+    strategy = get_strategy(run.strategy)
+    fsdp = strategy.fsdp and run.zero_stage >= 3
+
+    def build(tree):
+        if isinstance(tree, ParamSpec):
+            return NamedSharding(
+                mesh, param_pspec(tree, mesh, strategy, fsdp_override=fsdp))
+        if isinstance(tree, dict):
+            return {k: build(v) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [build(v) for v in tree]
+        raise TypeError(type(tree))
+
+    return build(model_spec(cfg))
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, run: RunConfig):
+    """Optimizer-state (m/v) shardings: ZeRO>=1 always data-shards them."""
+    strategy = get_strategy(run.strategy)
+    fsdp = (strategy.fsdp and run.zero_stage >= 1) or run.zero_stage >= 1
+
+    def build(tree):
+        if isinstance(tree, ParamSpec):
+            return NamedSharding(
+                mesh, param_pspec(tree, mesh, strategy, fsdp_override=fsdp))
+        if isinstance(tree, dict):
+            return {k: build(v) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [build(v) for v in tree]
+        raise TypeError(type(tree))
+
+    return build(model_spec(cfg))
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, run: RunConfig,
+                    specs: dict) -> dict:
+    """Shardings for a batch dict (train or decode inputs)."""
+    strategy = get_strategy(run.strategy)
+    out = {}
+    for k, s in specs.items():
+        if k == "pos" or np.ndim(s) == 0 or len(s.shape) == 0:
+            out[k] = NamedSharding(mesh, P())
+            continue
+        baxes = batch_partition(mesh, s.shape[0], strategy)
+        spec = [baxes] + [None] * (len(s.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, run: RunConfig,
+                    cache_abstract) -> dict:
+    """Shardings for the decode cache pytree.
+
+    batch -> (pod, data) when divisible; kv_heads/ssm_head -> model when
+    divisible, else the cache sequence dim -> model (sequence-sharded KV —
+    GSPMD inserts the softmax-combine collectives).
+    """
+    from repro.models.model import cache_logical_axes
+    strategy = get_strategy(run.strategy)
+    model_n = _axis_size(mesh, "model")
+    axes_tree = cache_logical_axes(cfg)
+
+    def leaf_spec(arr, axes):
+        spec: list = [None] * len(arr.shape)
+        used_model = False
+        for i, ax in enumerate(axes):
+            n = arr.shape[i]
+            if ax == "batch":
+                baxes = batch_partition(mesh, n, strategy)
+                spec[i] = baxes
+            elif ax in ("kv_heads", "ssm_head") and strategy.tp and \
+                    model_n > 1 and n % model_n == 0:
+                spec[i] = "model"
+                used_model = True
+        if strategy.tp and model_n > 1 and not used_model:
+            for i, ax in enumerate(axes):
+                if ax == "cache_seq" and arr.shape[i] % model_n == 0:
+                    spec[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf_spec, cache_abstract, axes_tree)
+
+
+def make_activation_rules(cfg: ModelConfig, mesh: Mesh, run: RunConfig):
+    """Activation-sharding rules (see core/actshard.py) for one run.
+
+    Logical names (shapes as produced by the model code):
+      hidden       (B, S, D)        batch -> (pod, data)
+      heads        (B, S, H, Dh)    + H -> model when divisible
+      kv           (B, S, K, Dh)    + K -> model when divisible
+      ffn_hidden   (B, S, F)        + F -> model when divisible
+      logits       (B, S, V)        + V -> model when divisible
+      moe_tokens   (G, gs, D)       G (token groups) -> (pod, data)
+      moe_dispatch (G, gs, E, C)    + E -> model when divisible
+      moe_expert   (G, E, C, D|F)   + E -> model; else last dim (TP-in-expert)
+      ssm_heads    (B, S, H, P)     + H -> model when divisible
+      ssm_inner    (B, S, C)        + C -> model when divisible (conv channels)
+
+    Every rule pins dim0 to the batch axes — this is the constraint whose
+    absence let GSPMD replicate the batch on `data` (see actshard docstring).
+    """
+    strategy = get_strategy(run.strategy)
+    model_n = _axis_size(mesh, "model")
+    tp = strategy.tp and model_n > 1
+
+    def mdl(n: int):
+        return "model" if (tp and n % model_n == 0 and n >= model_n) else None
+
+    # sequence parallelism (run.seq_parallel, beyond-paper §Perf): when the
+    # head count does NOT divide `model`, shard the sequence dim there
+    # instead of replicating the whole attention block.
+    def seq(n: int):
+        return "model" if (run.seq_parallel and tp
+                           and n % model_n == 0 and n >= model_n) else None
+
+    def rules(name: str, shape: tuple):
+        b = batch_partition(mesh, shape[0], strategy)
+
+        def ns(*spec):
+            return NamedSharding(mesh, P(*spec))
+
+        if name == "hidden":
+            if len(shape) == 3 and mdl(1) is None:
+                pass
+            return ns(b, seq(shape[1]) if len(shape) == 3 else None, None)
+        if name == "heads":
+            h = mdl(shape[2])
+            s = None if h else seq(shape[1])
+            return ns(b, s, h, None)
+        if name == "kv":
+            # under seq-parallel the KV tensors are all-gathered (small
+            # with GQA); otherwise kv heads go to model when they divide
+            h = mdl(shape[2])
+            if run.seq_parallel and mdl(shape[2]) is None:
+                h = None
+            return ns(b, None, h, None)
+        if name == "ssm_heads":
+            return ns(b, None, mdl(shape[2]), None)
+        if name in ("ffn_hidden", "logits", "ssm_inner"):
+            m = mdl(shape[-1])
+            s = None if m or len(shape) != 3 else seq(shape[1])
+            return ns(b, *([None] * (len(shape) - 3)), s, m)
+        if name == "q_blocks":        # (nb, B, qb, K, G, Dh) — scan xs
+            bb = batch_partition(mesh, shape[1], strategy)
+            return ns(None, bb, seq(shape[2]), None, None, None)
+        if name == "hidden_full":     # (B, S, D) — the Megatron-SP gather
+            # point at the FFN entry: pinning it on the bf16 tensor stops
+            # XLA hoisting rmsnorm's f32 cast before the all-gather
+            # (measured 2x gather bytes; see EXPERIMENTS.md §Perf-1 it.4)
+            return ns(b, None, None)
+        if name == "moe_tokens":
+            return ns(b, None, None)
+        if name == "moe_dispatch":
+            return ns(b, None, mdl(shape[2]), None)
+        if name == "moe_expert_d":     # (G, E, C, d_model): never shard d
+            e = mdl(shape[1])
+            if e is None and run.moe_defer_combine:
+                return None            # leave partial sums free to defer
+            return ns(b, e, None, None)
+        if name == "moe_expert_f":     # (G, E, C, d_ff): TP-in-expert when
+            e = mdl(shape[1])          # the expert count doesn't divide
+            return ns(b, e, None, None if e else mdl(shape[-1]))
+        return None
+
+    return rules
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def scalar_tree_shardings(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: replicated(mesh), tree)
+
+
+def describe(shardings, max_rows: int = 0) -> str:
+    """Human-readable table of a sharding pytree (debug/tests)."""
+    rows = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(shardings)
+    for path, sh in flat:
+        name = jax.tree_util.keystr(path)
+        rows.append(f"{name}: {sh.spec}")
+    if max_rows:
+        rows = rows[:max_rows]
+    return "\n".join(rows)

@@ -1,0 +1,39 @@
+"""ZeRO stage semantics (paper §7.2), realized in GSPMD.
+
+In torch-land ZeRO stages are process-group protocols; under GSPMD the same
+semantics fall out of *where tensors live*:
+
+  stage 1 — optimizer state sharded on `data`; params + grads replicated
+            across `data` (modulo TP).  The update step computes on the
+            shard and the new params are all-gathered implicitly.
+  stage 2 — + gradients reduce-scattered: we constrain the grad pytree to
+            the data-sharded layout so XLA emits reduce-scatter instead of
+            all-reduce for the DP gradient sum.
+  stage 3 — + parameters sharded (FSDP): weights are all-gathered at use,
+            per layer, inside the scan.
+
+``param_shardings`` / ``opt_shardings`` in core.sharding implement the
+placement; this module provides the gradient constraint hook used by the
+train-step builder.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import sharding as shd
+
+
+def grad_shardings(cfg: ModelConfig, mesh, run: RunConfig):
+    """Sharding pytree to constrain gradients to (ZeRO stage >= 2)."""
+    if run.zero_stage >= 2:
+        return shd.opt_shardings(cfg, mesh, run)
+    return shd.param_shardings(cfg, mesh, run)
+
+
+def constrain_grads(grads, cfg: ModelConfig, mesh, run: RunConfig):
+    if run.zero_stage < 2:
+        return grads
+    specs = grad_shardings(cfg, mesh, run)
+    return jax.tree.map(
+        lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, specs)

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (
+    DataConfig, PackedStream, PrefetchLoader, EOS, PAD,
+)
+
+__all__ = ["DataConfig", "PackedStream", "PrefetchLoader", "EOS", "PAD"]

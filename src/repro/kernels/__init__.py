@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots (flash attention, SSD scan),
+with jit'd wrappers (``ops``) and pure-jnp oracles (``ref``).
+
+Validated with ``interpret=True`` on CPU; compiled with VMEM BlockSpec
+tiling on TPU.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.ssd_scan import ssd_scan_bhsp
+
+__all__ = ["ops", "ref", "flash_attention_bhsd", "ssd_scan_bhsp"]

@@ -1,0 +1,134 @@
+"""Pallas TPU flash attention (causal + sliding window, GQA-aware).
+
+TPU adaptation of the paper's §3.1.2 insight (keep the hot working set in
+on-chip memory): instead of CUDA shared-memory tiles, we block HBM→VMEM with
+``BlockSpec`` and keep the online-softmax running statistics in VMEM scratch
+across the innermost grid dimension.  The MXU sees (block_q × head_dim) @
+(head_dim × block_k) matmuls with 128-aligned dims.
+
+Grid: ``(batch, q_heads, num_q_blocks, num_kv_blocks)`` — the kv dimension is
+innermost and sequential on TPU, so the scratch accumulator carries across kv
+blocks of one q block.  GQA is handled in the k/v index_map (kv head =
+q_head // group_size) — no materialized head broadcast, which is exactly the
+HBM-traffic win GQA exists for.
+
+Layout contract (from ops.py): q (B, H, S, Dh), k/v (B, K, S, Dh),
+out (B, H, S, Dh).  Causal masking assumes q and kv positions both start
+at 0 (self-attention over the same sequence).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 block_q: int, block_k: int, num_kv_blocks: int,
+                 window, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kv_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kv_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+
+    # skip fully-masked blocks (still executed on TPU grid, but cheap via when)
+    block_needed = ki * block_k <= qi * block_q + block_q - 1
+    if window is not None:
+        # earliest kv this q block can see: q_start - window + 1
+        block_needed = jnp.logical_and(
+            block_needed,
+            (ki + 1) * block_k - 1 >= qi * block_q - window + 1)
+
+    @pl.when(block_needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, Dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        # rows with no visible kv (shouldn't happen causally) -> zeros
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block_q", "block_k", "interpret"))
+def flash_attention_bhsd(q, k, v, *, window=None,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = False):
+    """q: (B,H,S,Dh); k/v: (B,K,S,Dh) with H % K == 0.  Causal."""
+    B, H, S, Dh = q.shape
+    K = k.shape[1]
+    assert H % K == 0, (H, K)
+    G = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+    scale = Dh ** -0.5
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, Dh), q.dtype),
+        scratch_shapes=[
+            # fp32 online-softmax state in VMEM, persistent across the kv dim
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

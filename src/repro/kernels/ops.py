@@ -1,0 +1,57 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Model code calls these with model-layout tensors; the wrappers transpose to
+kernel layout, pick hardware-aligned block sizes, and run the kernel —
+``interpret=True`` on CPU (this container), compiled on real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.ssd_scan import ssd_scan_bhsp
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pick_block(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (prefers multiples of 128)."""
+    b = min(target, S)
+    while S % b:
+        b -= 1
+    return b
+
+
+def flash_attention(q, k, v, window=None, block_q: int = 512,
+                    block_k: int = 512, interpret=None):
+    """Model-layout wrapper.  q: (B,S,H,Dh); k/v: (B,S,K,Dh) -> (B,S,H,Dh)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    S = q.shape[1]
+    bq = _pick_block(S, block_q)
+    bk = _pick_block(S, block_k)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_bhsd(qt, kt, vt, window=window, block_q=bq,
+                             block_k=bk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 256, interpret=None):
+    """Model-layout wrapper.  x: (B,S,H,P); dt: (B,S,H); A: (H,);
+    Bm/Cm: (B,S,N) -> y: (B,S,H,P)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, S, H, P = x.shape
+    Q = _pick_block(S, chunk)
+    xt = x.transpose(0, 2, 1, 3)                     # (B,H,S,P)
+    dtt = dt.astype(jnp.float32).transpose(0, 2, 1)  # (B,H,S)
+    a = dtt * A.astype(jnp.float32)[None, :, None]   # (B,H,S)
+    y = ssd_scan_bhsp(xt, dtt, a, Bm, Cm, chunk=Q, interpret=interpret)
+    return y.transpose(0, 2, 1, 3)

@@ -1,0 +1,131 @@
+"""HLO post-mortem: collective census + roofline terms from a compiled
+dry-run artifact.
+
+``cost_analysis()`` has no collective accounting, so we parse the optimized
+(post-SPMD) HLO text and sum the tensor sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, converting
+each to *per-device link bytes* with the standard ring-algorithm factors.
+Shapes in the partitioned module are already per-device.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (values from the assignment).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result shapes live between '=' and the op name: `%x = bf16[8,128]{1,0} op(`
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str, op_pos: int) -> int:
+    eq = line.find("=")
+    if eq < 0 or eq > op_pos:
+        return 0
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(line[eq:op_pos])
+               if m.group(1) in _DTYPE_BYTES)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:                      # iota form [num_groups,group_size]
+        return int(m.group(2))
+    return 2
+
+
+def _link_factor(op: str, n: int) -> float:
+    """Per-device link bytes as a multiple of the parsed result bytes
+    (ring algorithms).  reduce-scatter's result is the shard, hence (n-1)."""
+    if op == "all-gather":
+        return (n - 1) / n
+    if op == "all-reduce":
+        return 2 * (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0                 # collective-permute
+
+
+@dataclass
+class CollectiveCensus:
+    ops: list = field(default_factory=list)   # (op, result_bytes, group, link)
+    by_op: dict = field(default_factory=dict)
+    total_result_bytes: int = 0
+    total_link_bytes: float = 0.0
+
+    def add(self, op: str, rbytes: int, group: int):
+        link = rbytes * _link_factor(op, group)
+        self.ops.append((op, rbytes, group, link))
+        agg = self.by_op.setdefault(op, {"count": 0, "bytes": 0,
+                                         "link_bytes": 0.0})
+        agg["count"] += 1
+        agg["bytes"] += rbytes
+        agg["link_bytes"] += link
+        self.total_result_bytes += rbytes
+        self.total_link_bytes += link
+
+    def summary(self) -> dict:
+        return {
+            "by_op": self.by_op,
+            "total_result_bytes": self.total_result_bytes,
+            "total_link_bytes": self.total_link_bytes,
+            "num_ops": len(self.ops),
+        }
+
+
+def collective_census(hlo_text: str) -> CollectiveCensus:
+    census = CollectiveCensus()
+    for line in hlo_text.splitlines():
+        for op in _COLLECTIVES:
+            # match ` op(` or ` op-start(` — skip `-done` (already counted)
+            pos = line.find(f" {op}(")
+            if pos < 0:
+                pos = line.find(f" {op}-start(")
+            if pos < 0:
+                continue
+            census.add(op, _result_bytes(line, pos), _group_size(line))
+            break
+    return census
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
+                   link_bytes_per_device: float) -> dict:
+    """The three §Roofline terms, in seconds, from per-device quantities."""
+    compute = flops_per_device / PEAK_FLOPS
+    memory = hbm_bytes_per_device / HBM_BW
+    collective = link_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).split("_")[0]
+    return terms

@@ -1,0 +1,16 @@
+from repro.models.init import abstract_params, init_params, param_bytes
+from repro.models.inputs import input_specs, make_batch
+from repro.models.model import (
+    decode_step,
+    forward_train,
+    init_cache,
+    loss_fn,
+    prefill,
+)
+from repro.models.spec import count_params, model_spec
+
+__all__ = [
+    "abstract_params", "init_params", "param_bytes", "input_specs",
+    "make_batch", "decode_step", "forward_train", "init_cache", "loss_fn",
+    "prefill", "count_params", "model_spec",
+]

@@ -1,0 +1,257 @@
+"""GQA attention: training/prefill (blockwise, memory-efficient) and decode.
+
+The training/prefill path is q-block-chunked so the (S, S) logits tensor is
+never materialized — required at 32k context where a naive einsum would need
+terabytes of HBM.  This pure-JAX path doubles as the oracle for the Pallas
+flash-attention kernel (``repro.kernels.flash_attention``); ``use_pallas``
+switches the hot loop to the kernel (TPU / interpret mode).
+
+Sliding-window attention (``cfg.sliding_window``) is a first-class variant:
+it bounds the KV range per query and, at decode time, turns the KV cache into
+a ring buffer of ``window`` slots — this is what makes ``long_500k`` decode
+sub-quadratic-feasible for dense architectures (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.actshard import constrain
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- rotary ----
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pe(positions: jax.Array, d_model: int) -> jax.Array:
+    """(S,) -> (S, d_model) classic transformer sinusoidal embedding."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------- projections ----
+
+def qkv_proj(p: dict, x: jax.Array, cfg: ModelConfig):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    return (constrain(q, "heads"), constrain(k, "kv"), constrain(v, "kv"))
+
+
+def out_proj(p: dict, o: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+# ------------------------------------------------- blockwise causal core ----
+
+def _attend_block(q, k, v, q_pos, kv_pos, window, scale):
+    """q: (B,qb,K,G,Dh)  k/v: (B,S,K,Dh)  -> (B,qb,K,G,Dh).
+
+    Computes softmax over the full kv range with causal (+ window) masking.
+    fp32 logits/softmax for stability.
+    """
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    mask = kv_pos[None, :] <= q_pos[:, None]                 # causal
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window  # sliding window
+    logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def causal_attention(q, k, v, cfg: ModelConfig, q_block: int = 512,
+                     positions: Optional[jax.Array] = None,
+                     unroll: bool = False, one_block: bool = False):
+    """q: (B,S,H,Dh), k/v: (B,S,K,Dh) -> (B,S,H,Dh).  Full/sliding causal.
+
+    ``unroll`` replaces the q-block scan with straight-line HLO (dry-run
+    cost probes only — XLA cost_analysis counts loop bodies once).
+
+    ``one_block`` computes all q rows in one _attend_block call.  Used by
+    sequence parallelism: the q-block SCAN's interleaved S-tiling cannot
+    merge back into a contiguously S-sharded hidden (GSPMD inserted 24 GiB
+    logit all-gathers to reshard — measured, see EXPERIMENTS.md §Perf-1);
+    with one block the S shards flow through scores -> probs -> output
+    untouched.  The (S_shard, S) logits transient is remat-bounded.
+    """
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = Dh ** -0.5
+    window = cfg.sliding_window
+    qg = q.reshape(B, S, K, G, Dh)
+    kv_pos = jnp.arange(S) if positions is None else positions
+
+    if one_block or S <= q_block:
+        o = _attend_block(qg, k, v, kv_pos, kv_pos, window, scale)
+        return o.reshape(B, S, H, Dh)
+
+    nb = S // q_block
+    assert S % q_block == 0, (S, q_block)
+    q_blocks = qg.reshape(B, nb, q_block, K, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    # under sequence parallelism the within-block q rows stay sharded over
+    # `model`, so every model shard works on every scan iteration (the
+    # OUTER nb dim is scanned sequentially — sharding it would idle chips)
+    q_blocks = constrain(q_blocks, "q_blocks")
+
+    # checkpoint the block body: otherwise the scan VJP stacks the softmax
+    # residuals across blocks — the full (S, S) probs tensor, 6 GB/device in
+    # f32 at 4k context (measured; see EXPERIMENTS.md §Perf).  Recomputing
+    # scores in the backward is the flash-attention trade.
+    @jax.checkpoint
+    def body(_, inputs):
+        qb, start = inputs
+        q_pos = start + jnp.arange(q_block)
+        o = _attend_block(qb, k, v, q_pos, kv_pos, window, scale)
+        return None, o
+
+    starts = jnp.arange(nb) * q_block
+    if unroll:
+        o_blocks = jnp.stack([body(None, (q_blocks[i], starts[i]))[1]
+                              for i in range(nb)])
+    else:
+        _, o_blocks = jax.lax.scan(body, None, (q_blocks, starts))
+    o = o_blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, Dh)
+    return o
+
+
+# -------------------------------------------------------------- training ----
+
+def attention_train(p: dict, x: jax.Array, cfg: ModelConfig,
+                    use_pallas: bool = False,
+                    unroll: bool = False,
+                    one_block: bool = False) -> jax.Array:
+    """Full-sequence attention (training / prefill without cache return)."""
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(p, x, cfg)
+    if cfg.pos_embedding == "rope":
+        pos = jnp.arange(S)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        o = causal_attention(q, k, v, cfg, unroll=unroll,
+                             one_block=one_block)
+    return out_proj(p, constrain(o, "heads"))
+
+
+# ---------------------------------------------------------------- decode ----
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, n_groups: int,
+                  dtype=jnp.bfloat16, abstract: bool = False):
+    """Stacked (over scan groups) KV cache for one attention sublayer slot.
+
+    For sliding-window configs the cache has ``window`` slots (ring buffer);
+    otherwise ``cache_len`` slots.
+    """
+    slots = min(cache_len, cfg.sliding_window or cache_len)
+    shape = (n_groups, batch, slots, cfg.num_kv_heads, cfg.head_dim)
+    if abstract:
+        arr = jax.ShapeDtypeStruct(shape, dtype)
+        return {"k": arr, "v": arr}
+    z = jnp.zeros(shape, dtype)
+    return {"k": z, "v": z}
+
+
+def attention_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
+                      cache_slots: int, use_pallas: bool = False,
+                      unroll: bool = False):
+    """Prefill: full attention + return the populated KV cache slice.
+
+    Returns (out (B,S,d), {"k","v"} (B, slots, K, Dh)).  When
+    ``cache_slots < S`` (sliding window) the last ``slots`` positions are
+    kept, laid out at ring indices ``pos % slots``.
+    """
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(p, x, cfg)
+    if cfg.pos_embedding == "rope":
+        pos = jnp.arange(S)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        o = causal_attention(q, k, v, cfg)
+    o = constrain(o, "heads")
+    if cache_slots >= S:
+        pad = cache_slots - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        # last `slots` positions, placed at ring index pos % slots
+        tail_k = k[:, S - cache_slots:]
+        tail_v = v[:, S - cache_slots:]
+        idx = (jnp.arange(S - cache_slots, S)) % cache_slots
+        ck = jnp.zeros_like(tail_k).at[:, idx].set(tail_k)
+        cv = jnp.zeros_like(tail_v).at[:, idx].set(tail_v)
+    return out_proj(p, o), {"k": ck, "v": cv}
+
+
+def attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                     cfg: ModelConfig):
+    """One-token decode.  x: (B,1,d); cache k/v: (B, slots, K, Dh);
+    pos: scalar int32 OR (B,) int32 — absolute position of each new token
+    (0-based).  Per-slot positions support continuous batching (each slot
+    of the serving engine decodes at its own depth).
+
+    Returns (out (B,1,d), updated cache).
+    """
+    B = x.shape[0]
+    slots = cache["k"].shape[1]
+    q, k, v = qkv_proj(p, x, cfg)                     # (B,1,H/K,Dh)
+    posv = jnp.broadcast_to(pos, (B,)).astype(jnp.int32)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, posv[:, None], cfg.rope_theta)
+        k = apply_rope(k, posv[:, None], cfg.rope_theta)
+    slot = posv % slots                               # (B,) ring index
+    bidx = jnp.arange(B)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+
+    H, Dh = q.shape[2], q.shape[3]
+    K = ck.shape[2]
+    G = H // K
+    qg = q.reshape(B, 1, K, G, Dh)
+    # absolute position held by each ring slot i:  p - ((p - i) mod slots)
+    slot_ids = jnp.arange(slots)
+    slot_pos = posv[:, None] - ((posv[:, None] - slot_ids[None, :]) % slots)
+    valid = (slot_pos >= 0) & (slot_pos <= posv[:, None])  # (B, slots)
+    if cfg.sliding_window is not None:
+        valid &= (posv[:, None] - slot_pos) < cfg.sliding_window
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck).astype(jnp.float32)
+    logits = logits * (Dh ** -0.5)
+    logits = jnp.where(valid[:, None, None, None, :], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, cv).reshape(B, 1, H, Dh)
+    return out_proj(p, constrain(o, "heads")), {"k": ck, "v": cv}

@@ -1,0 +1,69 @@
+"""Parameter initialization from spec trees (pure JAX, no flax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import ParamSpec, iter_specs, model_spec
+
+
+def _init_leaf(key, ps: ParamSpec, dtype) -> jax.Array:
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, dtype)
+    if ps.init == "a_log":
+        # A in [1, 16], stored as log (Mamba-2 convention)
+        u = jax.random.uniform(key, ps.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if ps.init == "dt_bias":
+        # dt ~ uniform in [1e-3, 1e-1], stored pre-softplus
+        u = jax.random.uniform(key, ps.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    scale = ps.scale if ps.scale is not None else 0.02
+    return (jax.random.normal(key, ps.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Materialize the parameter pytree for ``cfg``."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    spec = model_spec(cfg)
+    names = [name for name, _ in iter_specs(spec)]
+    keys = dict(zip(names, jax.random.split(jax.random.PRNGKey(seed),
+                                            max(len(names), 2))))
+
+    def build(tree, prefix=""):
+        if isinstance(tree, ParamSpec):
+            return _init_leaf(keys[prefix], tree, dtype)
+        if isinstance(tree, dict):
+            return {k: build(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [build(v, f"{prefix}/{i}" if prefix else str(i))
+                    for i, v in enumerate(tree)]
+        raise TypeError(type(tree))
+
+    return build(spec)
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    def build(tree):
+        if isinstance(tree, ParamSpec):
+            return jax.ShapeDtypeStruct(tree.shape, dtype)
+        if isinstance(tree, dict):
+            return {k: build(v) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [build(v) for v in tree]
+        raise TypeError(type(tree))
+
+    return build(model_spec(cfg))
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    itemsize = np.dtype(cfg.param_dtype).itemsize
+    return sum(ps.size for _, ps in iter_specs(model_spec(cfg))) * itemsize

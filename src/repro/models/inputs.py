@@ -1,0 +1,78 @@
+"""Input construction: abstract specs (dry-run) and concrete synthetic
+batches (smoke tests / examples) for every (arch x input-shape) pair.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins — weak-type-correct,
+shardable, no device allocation — one entry per model input.  The modality
+frontends are stubs per the assignment: VLM batches carry precomputed patch
+embeddings, audio batches carry precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+
+VLM_NUM_PATCHES = 256
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape,
+                      batch_override: int | None = None) -> dict:
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    specs = {}
+    if cfg.frontend == "vision":
+        P = min(VLM_NUM_PATCHES, S // 2)
+        specs["prefix_embeddings"] = _sds((B, P, cfg.d_model), jnp.bfloat16)
+        specs["tokens"] = _sds((B, S - P), jnp.int32)
+    elif cfg.frontend == "audio":
+        specs["frame_embeddings"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = _sds((B, S), jnp.int32)
+    specs["labels"] = _sds((B, S), jnp.int32)
+    specs["loss_mask"] = _sds((B, S), jnp.float32)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape,
+                       batch_override: int | None = None) -> dict:
+    B = batch_override or shape.global_batch
+    return {
+        "token": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                batch_override: int | None = None) -> dict:
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape, batch_override)
+    return train_input_specs(cfg, shape, batch_override)
+
+
+# ------------------------------------------------------ concrete batches ----
+
+def make_batch(cfg: ModelConfig, shape: InputShape, seed: int = 0,
+               batch_override: int | None = None) -> dict:
+    """Synthetic batch with the exact structure of ``input_specs``."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in train_input_specs(cfg, shape, batch_override).items():
+        if k == "loss_mask":
+            m = np.ones(s.shape, np.float32)
+            if cfg.frontend == "vision":
+                P = min(VLM_NUM_PATCHES, shape.seq_len // 2)
+                m[:, :P] = 0.0          # no loss on image prefix
+            out[k] = jnp.asarray(m)
+        elif s.dtype == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, s.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(s.shape, np.float32) * 0.02, s.dtype)
+    return out

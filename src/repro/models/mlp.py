@@ -1,0 +1,28 @@
+"""Dense FFN variants: SwiGLU (llama-family), GELU (starcoder2/musicgen),
+squared-ReLU (nemotron/minitron)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.actshard import constrain
+
+
+def mlp_apply(p: dict, x: jax.Array, mlp_type: str) -> jax.Array:
+    dtype = x.dtype
+    h = constrain(x @ p["w1"].astype(dtype), "ffn_hidden")
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(h) * constrain(x @ p["w3"].astype(dtype), "ffn_hidden")
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(h)
+    elif mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(mlp_type)
+    return h @ p["w2"].astype(dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

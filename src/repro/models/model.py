@@ -1,0 +1,305 @@
+"""Model assembly: embedding/frontends -> scanned layer groups -> LM head.
+
+Entry points (all pure functions of (params, batch/cache)):
+  * ``forward_train(params, batch, cfg, run)``  -> (logits, aux)
+  * ``loss_fn(params, batch, cfg, run)``        -> (loss, metrics)
+  * ``prefill(params, batch, cfg, run)``        -> (logits, cache)
+  * ``decode_step(params, cache, token, pos, cfg, run)`` -> (logits, cache)
+
+Layers run as a ``lax.scan`` over stacked layer groups (period P =
+lcm(attn_every, moe.every)); compile time is flat in depth.  Remat policy
+(``run.remat``) wraps the scan body with ``jax.checkpoint``.
+
+Modality frontends (vision/audio) are stubs per the assignment: the batch
+carries precomputed prefix/frame embeddings and this module consumes them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.actshard import constrain
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.mlp import mlp_apply, rmsnorm
+from repro.models.spec import group_period, layer_schedule
+
+AUX_KEYS = ("moe_balance_loss", "moe_z_loss")
+
+
+# ------------------------------------------------------------ embeddings ----
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    tab = params["embed"]["tok"].astype(compute_dtype(cfg))
+    return jnp.take(tab, tokens, axis=0)
+
+
+def build_hidden(params, batch: dict, cfg: ModelConfig):
+    """Assemble the input hidden states from tokens and/or stub embeddings."""
+    dtype = compute_dtype(cfg)
+    parts = []
+    if "prefix_embeddings" in batch:                 # vlm: ViT stub output
+        parts.append(batch["prefix_embeddings"].astype(dtype))
+    if "frame_embeddings" in batch:                  # audio: codec stub output
+        parts.append(batch["frame_embeddings"].astype(dtype))
+    if "tokens" in batch:
+        parts.append(embed_tokens(params, batch["tokens"], cfg))
+    h = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.pos_embedding == "sinusoidal":
+        S = h.shape[1]
+        pe = A.sinusoidal_pe(jnp.arange(S), cfg.d_model).astype(dtype)
+        h = h + pe[None]
+    return constrain(h, "hidden")
+
+
+def unembed(params, h, cfg: ModelConfig):
+    w = params["embed"]["tok"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    return constrain(jnp.einsum("bsd,vd->bsv", h, w.astype(h.dtype)), "logits")
+
+
+# ------------------------------------------------------------- sublayers ----
+
+def _zeros_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def sublayer_train(p, x, mixer: str, ffn: str, cfg: ModelConfig,
+                   run: RunConfig):
+    aux = _zeros_aux()
+    h = rmsnorm(x, p["norm1"]["scale"], cfg.norm_eps)
+    if mixer == "attn":
+        h = A.attention_train(p["attn"], h, cfg, use_pallas=run.use_pallas,
+                              unroll=run.unroll,
+                              one_block=run.seq_parallel)
+    else:
+        h = SSM.ssm_train(p["ssm"], h, cfg, use_pallas=run.use_pallas)
+    x = constrain(x + h, "hidden")
+    if ffn != "none":
+        h = rmsnorm(x, p["norm2"]["scale"], cfg.norm_eps)
+        if run.seq_parallel:
+            # Megatron-SP: gather the bf16 post-norm hidden to full S for
+            # the TP FFN; the output constraint below makes XLA emit a
+            # reduce-scatter (not all-reduce) for the w2 partial sums.
+            h = constrain(h, "hidden_full")
+        if ffn == "moe":
+            h, moe_aux = MOE.moe_apply(p["moe"], h, cfg)
+            for k in AUX_KEYS:
+                aux[k] = aux[k] + moe_aux[k]
+        else:
+            h = mlp_apply(p["mlp"], h, cfg.mlp_type)
+        if run.seq_parallel:
+            h = constrain(h, "hidden")
+        x = constrain(x + h, "hidden")
+    return x, aux
+
+
+# --------------------------------------------------------------- forward ----
+
+def backbone_train(params, h, cfg: ModelConfig, run: RunConfig):
+    """Scan the layer groups; returns (h, aux-sums)."""
+    P = group_period(cfg)
+    sched = layer_schedule(cfg)[:P]
+
+    def group_body(carry, group_params):
+        x, acc = carry
+        for i, (mixer, ffn) in enumerate(sched):
+            x, aux = sublayer_train(group_params[i], x, mixer, ffn, cfg, run)
+            acc = {k: acc[k] + aux[k] for k in AUX_KEYS}
+        return (x, acc), None
+
+    if run.remat in ("layer", "full"):
+        group_body = jax.checkpoint(group_body,
+                                    prevent_cse=False)
+    if run.unroll:
+        carry = (h, _zeros_aux())
+        n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda l: l[g], tuple(params["layers"]))
+            carry, _ = group_body(carry, gp)
+        return carry
+    (h, acc), _ = jax.lax.scan(group_body, (h, _zeros_aux()),
+                               tuple(params["layers"]))
+    return h, acc
+
+
+def forward_train(params, batch: dict, cfg: ModelConfig, run: RunConfig):
+    h = build_hidden(params, batch, cfg)
+    h, aux = backbone_train(params, h, cfg, run)
+    h = rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    return unembed(params, h, cfg), aux
+
+
+def softmax_xent(logits, labels, mask):
+    """Vocab-parallel-friendly cross entropy (one-hot formulation)."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    oh = jax.nn.one_hot(labels, lg.shape[-1], dtype=jnp.float32)
+    ll = jnp.sum(oh * lg, axis=-1)
+    per_tok = (lse - ll) * mask
+    return jnp.sum(per_tok) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, run: RunConfig):
+    logits, aux = forward_train(params, batch, cfg, run)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(batch["labels"].shape, jnp.float32)
+    xent = softmax_xent(logits, batch["labels"], mask)
+    loss = xent
+    if cfg.moe is not None:
+        loss = (loss + cfg.moe.balance_coef * aux["moe_balance_loss"]
+                + cfg.moe.router_z_coef * aux["moe_z_loss"])
+    metrics = {"loss": loss, "xent": xent, **aux}
+    return loss, metrics
+
+
+# ----------------------------------------------------------------- cache ----
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               abstract: bool = False):
+    """Decode cache pytree: one entry per sublayer slot, stacked over groups."""
+    P = group_period(cfg)
+    n_groups = cfg.num_layers // P
+    sched = layer_schedule(cfg)[:P]
+    layers = []
+    for mixer, _ in sched:
+        if mixer == "attn":
+            layers.append(A.init_kv_cache(cfg, batch, cache_len, n_groups,
+                                          abstract=abstract))
+        else:
+            layers.append(SSM.init_ssm_cache(cfg, batch, n_groups,
+                                             abstract=abstract))
+    return {"layers": layers}
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical axes pytree matching ``init_cache`` (see core/sharding.py)."""
+    P = group_period(cfg)
+    sched = layer_schedule(cfg)[:P]
+    layers = []
+    for mixer, _ in sched:
+        if mixer == "attn":
+            ax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+            layers.append({"k": ax, "v": ax})
+        else:
+            layers.append({
+                "state": ("layers", "batch", "ssm_head", None, "ssm_state"),
+                "conv": ("layers", "batch", "conv", None),
+            })
+    return {"layers": layers}
+
+
+# ---------------------------------------------------------------- prefill ----
+
+def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,
+            cache_len: Optional[int] = None):
+    """Run the full prompt, return (last-position logits, populated cache)."""
+    P = group_period(cfg)
+    sched = layer_schedule(cfg)[:P]
+    h = build_hidden(params, batch, cfg)
+    S = h.shape[1]
+    cache_len = cache_len or S
+    slots = min(cache_len, cfg.sliding_window or cache_len)
+
+    def group_body(x, group_params):
+        new_caches = []
+        for i, (mixer, _ffn) in enumerate(sched):
+            p = group_params[i]
+            hh = rmsnorm(x, p["norm1"]["scale"], cfg.norm_eps)
+            if mixer == "attn":
+                hh, c = A.attention_prefill(p["attn"], hh, cfg, slots,
+                                            use_pallas=run.use_pallas,
+                                            unroll=run.unroll)
+            else:
+                hh, c = SSM.ssm_prefill(p["ssm"], hh, cfg,
+                                        use_pallas=run.use_pallas)
+            x = constrain(x + hh, "hidden")
+            ffn = sched[i][1]
+            if ffn != "none":
+                hh = rmsnorm(x, p["norm2"]["scale"], cfg.norm_eps)
+                if ffn == "moe":
+                    hh, _ = MOE.moe_apply(p["moe"], hh, cfg)
+                else:
+                    hh = mlp_apply(p["mlp"], hh, cfg.mlp_type)
+                x = constrain(x + hh, "hidden")
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if run.remat in ("layer", "full"):
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    if run.unroll:
+        n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+        per_group = []
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda l: l[g], tuple(params["layers"]))
+            h, c = group_body(h, gp)
+            per_group.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    else:
+        h, caches = jax.lax.scan(group_body, h, tuple(params["layers"]))
+    h = rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params, h[:, -1:], cfg)
+    return logits, {"layers": list(caches)}
+
+
+# ----------------------------------------------------------------- decode ----
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig, run: RunConfig):
+    """One decoding step.  token: (B, 1) int32; pos: scalar int32 OR (B,)
+    int32 (0-based absolute position of each new token — vector form for
+    continuous batching).  Returns (logits (B,1,V), new cache)."""
+    P = group_period(cfg)
+    sched = layer_schedule(cfg)[:P]
+    B = token.shape[0]
+    h = embed_tokens(params, token, cfg)
+    if cfg.pos_embedding == "sinusoidal":
+        posv = jnp.broadcast_to(pos, (B,))
+        pe = A.sinusoidal_pe(posv[:, None], cfg.d_model)   # (B,1,d)
+        h = h + pe.astype(h.dtype)
+
+    def group_body(x, inp):
+        group_params, group_cache = inp
+        new_caches = []
+        for i, (mixer, ffn) in enumerate(sched):
+            p = group_params[i]
+            hh = rmsnorm(x, p["norm1"]["scale"], cfg.norm_eps)
+            if mixer == "attn":
+                hh, c = A.attention_decode(p["attn"], hh, group_cache[i],
+                                           pos, cfg)
+            else:
+                hh, c = SSM.ssm_decode(p["ssm"], hh, group_cache[i], cfg)
+            x = constrain(x + hh, "hidden")
+            if ffn != "none":
+                hh = rmsnorm(x, p["norm2"]["scale"], cfg.norm_eps)
+                if ffn == "moe":
+                    hh, _ = MOE.moe_apply(p["moe"], hh, cfg)
+                else:
+                    hh = mlp_apply(p["mlp"], hh, cfg.mlp_type)
+                x = constrain(x + hh, "hidden")
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if run.unroll:
+        n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+        per_group = []
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda l: l[g], tuple(params["layers"]))
+            gc = jax.tree.map(lambda l: l[g], tuple(cache["layers"]))
+            h, c = group_body(h, (gp, gc))
+            per_group.append(c)
+        new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    else:
+        h, new_layers = jax.lax.scan(
+            group_body, h, (tuple(params["layers"]), tuple(cache["layers"])))
+    h = rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params, h, cfg)
+    return logits, {"layers": list(new_layers)}

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN — GShard-style grouped top-k dispatch with
+capacity, shared experts (qwen2-moe), router z-loss and load-balance loss.
+
+Tokens are processed in groups of ``moe.group_size`` so the one-hot
+dispatch/combine tensors stay O(group * E * capacity) instead of
+O(tokens * E * capacity_global).  The group dim carries the batch sharding
+(data axis); the expert dim carries expert parallelism (model axis) when
+``E % model_axis == 0`` (see core/sharding.py).
+
+FLOPs are capacity-bounded: compiled compute ≈ active-expert compute *
+capacity_factor, which is what the roofline's MODEL_FLOPS/HLO_FLOPs ratio
+checks against.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.actshard import constrain
+from repro.models.mlp import mlp_apply
+
+
+def _capacity(group: int, top_k: int, num_experts: int, factor: float) -> int:
+    c = int(math.ceil(group * top_k / num_experts * factor))
+    return max(4, ((c + 3) // 4) * 4)  # pad to a multiple of 4
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, d) -> (y: (B, S, d), aux: dict of scalar losses)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, k = moe.num_experts, moe.top_k
+    T = B * S
+    gs = min(moe.group_size, T)
+    xt = x.reshape(T, d)
+    T_pad = ((T + gs - 1) // gs) * gs
+    if T_pad != T:
+        # padded tokens route like real ones but are sliced off at the end;
+        # capacity waste is bounded by one group.
+        xt = jnp.pad(xt, ((0, T_pad - T), (0, 0)))
+    G = T_pad // gs
+    C = _capacity(gs, k, E, moe.capacity_factor)
+    dtype = x.dtype
+
+    xt = constrain(xt.reshape(G, gs, d), "moe_tokens")
+    logits = (xt @ p["router"].astype(dtype)).astype(jnp.float32)  # (G,gs,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # (G,gs,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- aux losses (Switch/GShard) ----
+    me = jnp.mean(probs, axis=1)                                   # (G,E)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32),
+                  axis=1)                                          # (G,E)
+    balance_loss = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- capacity-based dispatch ----
+    dispatch = jnp.zeros((G, gs, E, C), dtype)
+    combine = jnp.zeros((G, gs, E, C), jnp.float32)
+    counts = jnp.zeros((G, E), jnp.int32)
+    for j in range(k):
+        oh = jax.nn.one_hot(gate_idx[..., j], E, dtype=jnp.int32)  # (G,gs,E)
+        pos = jnp.cumsum(oh, axis=1) - 1 + counts[:, None, :]      # (G,gs,E)
+        pos_j = jnp.sum(pos * oh, axis=-1)                         # (G,gs)
+        within = pos_j < C
+        sel = (oh * within[..., None].astype(jnp.int32))           # (G,gs,E)
+        cap_oh = jax.nn.one_hot(pos_j, C, dtype=jnp.float32)       # (G,gs,C)
+        d_j = sel[..., :, None].astype(jnp.float32) * cap_oh[..., None, :]
+        dispatch = dispatch + d_j.astype(dtype)
+        combine = combine + d_j * gate_vals[..., j][..., None, None]
+        counts = counts + jnp.sum(oh, axis=1)
+
+    # ---- expert compute (einsum over capacity slots) ----
+    dispatch = constrain(dispatch, "moe_dispatch")
+    ein = constrain(jnp.einsum("gsec,gsd->gecd", dispatch, xt),
+                    "moe_expert_d")                                # (G,E,C,d)
+    h = constrain(jnp.einsum("gecd,edf->gecf", ein, p["w1"].astype(dtype)),
+                  "moe_expert_f")
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(h) * constrain(
+            jnp.einsum("gecd,edf->gecf", ein, p["w3"].astype(dtype)),
+            "moe_expert_f")
+    elif cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jnp.square(jax.nn.relu(h))
+    eout = constrain(jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(dtype)),
+                     "moe_expert_d")                               # (G,E,C,d)
+    y = constrain(jnp.einsum("gsec,gecd->gsd", combine.astype(dtype), eout),
+                  "moe_tokens")
+
+    if moe.num_shared:
+        y = y + mlp_apply(p["shared"], xt, cfg.mlp_type)
+
+    y = y.reshape(T_pad, d)[:T]
+
+    aux = {
+        "moe_balance_loss": balance_loss,
+        "moe_z_loss": z_loss,
+        "moe_overflow": 1.0 - jnp.mean(
+            dispatch.astype(jnp.float32).sum(axis=(2, 3))) / k,
+    }
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,236 @@
+"""Mamba-2 SSD (state-space duality) block — chunked train/prefill scan and
+O(1)-state recurrent decode.  [arXiv:2405.21060]
+
+The chunked algorithm (``ssd_chunked``) splits the sequence into chunks of
+length Q: within a chunk the dual "attention-like" quadratic form is used
+(MXU-friendly), across chunks a linear recurrence carries the (H, P, N)
+state.  This pure-jnp implementation is the oracle for the Pallas kernel in
+``repro.kernels.ssd_scan``; ``use_pallas`` switches the hot loop.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.actshard import constrain
+
+
+def _rmsnorm_gated(y, z, scale, eps):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(z.dtype)
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  u: (B,S,C), w: (W,C), b: (C,).
+
+    Returns (y (B,S,C), new_state (B,W-1,C)) — state = last W-1 inputs.
+    """
+    W = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    else:
+        pad = init_state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)           # (B, S+W-1, C)
+    y = jnp.zeros_like(u)
+    for i in range(W):
+        y = y + up[:, i:i + u.shape[1]] * w[i].astype(u.dtype)
+    y = y + b.astype(u.dtype)
+    new_state = up[:, up.shape[1] - (W - 1):]
+    return y, new_state
+
+
+def _segsum_exp(dA_cs):
+    """L[..., q, k] = exp(dA_cs[..., q] - dA_cs[..., k]) for q >= k else 0.
+
+    dA_cs: (B, nc, Q, H) -> (B, nc, Q, Q, H)
+    """
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]
+    Q = dA_cs.shape[2]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    return L
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) head inputs; dt: (B,S,H) post-softplus steps; A: (H,) < 0;
+    Bm/Cm: (B,S,N) input/output projections (shared across heads, 1 group).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    S_orig = S
+    if S % Q:
+        # pad with dt=0 tokens: decay exp(0)=1, zero input — identity for the
+        # recurrence, so the final state is exact; padded outputs are sliced.
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A.astype(f32)                          # (B,nc,Q,H)
+    dA_cs = jnp.cumsum(dA, axis=2)                    # (B,nc,Q,H)
+    xdt = (xc.astype(f32) * dtc[..., None]).astype(x.dtype)
+
+    # ---- intra-chunk (quadratic, MXU-shaped) ----
+    L = _segsum_exp(dA_cs)                            # (B,nc,Q,Q,H) fp32
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(f32), Bc.astype(f32))
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp",
+                        scores, L, xdt.astype(f32))
+
+    # ---- chunk states ----
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # (B,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                        Bc.astype(f32), decay_states, xdt.astype(f32))
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def body(s, inp):
+        st, dec = inp
+        return s * dec[:, :, None, None] + st, s           # emit prev state
+
+    (s_final, prev_states) = jax.lax.scan(
+        body, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,N)
+
+    # ---- off-diagonal (state) contribution ----
+    state_decay = jnp.exp(dA_cs)                            # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cc.astype(f32), prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P).astype(x.dtype)
+    return y[:, :S_orig], s_final.astype(f32)
+
+
+def _proj_split(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Project residual stream to (z, conv-input u=[xin,B,C], dt_raw)."""
+    dtype = x.dtype
+    z = x @ p["wz"].astype(dtype)
+    xin = constrain(x @ p["wx"].astype(dtype), "ssm_inner")
+    Bm = x @ p["wB"].astype(dtype)
+    Cm = x @ p["wC"].astype(dtype)
+    dt_raw = x @ p["wdt"].astype(dtype)
+    u = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    return z, u, dt_raw
+
+
+def _post_conv_split(u, cfg: ModelConfig):
+    di = cfg.ssm.d_inner(cfg.d_model)
+    N = cfg.ssm.state
+    xin, Bm, Cm = u[..., :di], u[..., di:di + N], u[..., di + N:]
+    return xin, Bm, Cm
+
+
+def ssm_train(p: dict, x: jax.Array, cfg: ModelConfig,
+              use_pallas: bool = False) -> jax.Array:
+    """(B,S,d) -> (B,S,d), full-sequence (training / prefill core)."""
+    B, S, _ = x.shape
+    ssm = cfg.ssm
+    H = ssm.num_heads(cfg.d_model)
+    P = ssm.head_dim
+    z, u, dt_raw = _proj_split(p, x, cfg)
+    u, _ = _causal_conv(u, p["conv_w"], p["conv_b"])
+    u = jax.nn.silu(u)
+    xin, Bm, Cm = _post_conv_split(u, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = constrain(xin.reshape(B, S, H, P), "ssm_heads")
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y = kops.ssd_scan(xh, dt, A, Bm, Cm, chunk=ssm.chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = constrain(y, "ssm_heads").reshape(B, S, H * P)
+    y = _rmsnorm_gated(y, z, p["norm_scale"], cfg.norm_eps)
+    return y @ p["wo"].astype(y.dtype)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_groups: int,
+                   dtype=jnp.float32, abstract: bool = False):
+    """Stacked SSD decode state for one ssm sublayer slot."""
+    ssm = cfg.ssm
+    H = ssm.num_heads(cfg.d_model)
+    P = ssm.head_dim
+    N = ssm.state
+    conv_dtype = jnp.dtype(cfg.dtype)
+    conv_ch = ssm.d_inner(cfg.d_model) + 2 * N
+    st_shape = (n_groups, batch, H, P, N)
+    cv_shape = (n_groups, batch, ssm.conv_width - 1, conv_ch)
+    if abstract:
+        return {"state": jax.ShapeDtypeStruct(st_shape, dtype),
+                "conv": jax.ShapeDtypeStruct(cv_shape, conv_dtype)}
+    return {"state": jnp.zeros(st_shape, dtype),
+            "conv": jnp.zeros(cv_shape, conv_dtype)}
+
+
+def ssm_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
+                use_pallas: bool = False):
+    """Full-sequence forward that also returns the decode cache."""
+    B, S, _ = x.shape
+    ssm = cfg.ssm
+    H, P = ssm.num_heads(cfg.d_model), ssm.head_dim
+    z, u, dt_raw = _proj_split(p, x, cfg)
+    u_conv, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"])
+    u_conv = jax.nn.silu(u_conv)
+    xin, Bm, Cm = _post_conv_split(u_conv, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, S, H, P)
+    y, state = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, H * P)
+    y = _rmsnorm_gated(y, z, p["norm_scale"], cfg.norm_eps)
+    out = y @ p["wo"].astype(y.dtype)
+    # conv state: last (W-1) *pre-activation* conv inputs
+    return out, {"state": state, "conv": conv_state.astype(jnp.dtype(cfg.dtype))}
+
+
+def ssm_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One-token recurrent decode.  x: (B,1,d).  Returns (out, cache)."""
+    B = x.shape[0]
+    ssm = cfg.ssm
+    H, P, N = ssm.num_heads(cfg.d_model), ssm.head_dim, ssm.state
+    z, u, dt_raw = _proj_split(p, x, cfg)                 # (B,1,*)
+    # conv: window = [conv_state, u_t]
+    win = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+    y_conv = jnp.einsum("bwc,wc->bc", win, p["conv_w"].astype(u.dtype))
+    y_conv = jax.nn.silu(y_conv + p["conv_b"].astype(u.dtype))  # (B,C)
+    new_conv = win[:, 1:]
+    xin, Bm, Cm = _post_conv_split(y_conv, cfg)           # (B,*)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))      # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                   # (B,H)
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    state = cache["state"] * a[:, :, None, None] + dBx    # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, H * P).astype(x.dtype)
+    y = _rmsnorm_gated(y, z, p["norm_scale"], cfg.norm_eps)
+    out = y @ p["wo"].astype(y.dtype)
+    return out, {"state": state, "conv": new_conv.astype(jnp.dtype(cfg.dtype))}

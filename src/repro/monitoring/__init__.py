@@ -1,0 +1,5 @@
+from repro.monitoring.metrics import (
+    Counter, Gauge, Histogram, MetricsRegistry, Timer,
+)
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "Timer"]

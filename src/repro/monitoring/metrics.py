@@ -1,0 +1,194 @@
+"""In-process metrics registry with Prometheus text exposition.
+
+The paper's §6.1 deploys Prometheus + Grafana next to SLURM; daemons don't
+fit a CI container, so the same observability surface is provided in-process:
+counters / gauges / histograms, labeled series, `expose()` emitting the
+Prometheus text format those servers would scrape, and an ASCII dashboard
+(`dashboard()`) standing in for Grafana.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DEFAULT_BUCKETS = (
+    0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 50.0, 100.0,
+    float("inf"))
+
+
+def _labels_key(labels: dict) -> tuple:
+    return tuple(sorted(labels.items()))
+
+
+def _labels_text(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+class Counter:
+    def __init__(self, name: str, help_: str = ""):
+        self.name, self.help = name, help_
+        self._vals: dict[tuple, float] = {}
+        self._lock = threading.Lock()
+
+    def inc(self, amount: float = 1.0, **labels):
+        assert amount >= 0, "counters only go up"
+        key = _labels_key(labels)
+        with self._lock:
+            self._vals[key] = self._vals.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        return self._vals.get(_labels_key(labels), 0.0)
+
+    def expose(self) -> list[str]:
+        out = [f"# HELP {self.name} {self.help}",
+               f"# TYPE {self.name} counter"]
+        for key, v in sorted(self._vals.items()):
+            out.append(f"{self.name}{_labels_text(dict(key))} {v}")
+        return out
+
+
+class Gauge:
+    def __init__(self, name: str, help_: str = ""):
+        self.name, self.help = name, help_
+        self._vals: dict[tuple, float] = {}
+        self._lock = threading.Lock()
+
+    def set(self, value: float, **labels):
+        with self._lock:
+            self._vals[_labels_key(labels)] = float(value)
+
+    def add(self, amount: float, **labels):
+        key = _labels_key(labels)
+        with self._lock:
+            self._vals[key] = self._vals.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        return self._vals.get(_labels_key(labels), 0.0)
+
+    def expose(self) -> list[str]:
+        out = [f"# HELP {self.name} {self.help}",
+               f"# TYPE {self.name} gauge"]
+        for key, v in sorted(self._vals.items()):
+            out.append(f"{self.name}{_labels_text(dict(key))} {v}")
+        return out
+
+
+class Histogram:
+    def __init__(self, name: str, help_: str = "", buckets=_DEFAULT_BUCKETS):
+        self.name, self.help = name, help_
+        self.buckets = tuple(buckets)
+        assert self.buckets[-1] == float("inf")
+        self._counts: dict[tuple, list[int]] = {}
+        self._sum: dict[tuple, float] = {}
+        self._lock = threading.Lock()
+
+    def observe(self, value: float, **labels):
+        key = _labels_key(labels)
+        with self._lock:
+            counts = self._counts.setdefault(key, [0] * len(self.buckets))
+            counts[bisect.bisect_left(self.buckets, value)] += 1
+            self._sum[key] = self._sum.get(key, 0.0) + value
+
+    def count(self, **labels) -> int:
+        return sum(self._counts.get(_labels_key(labels), []))
+
+    def quantile(self, q: float, **labels) -> float:
+        """Approximate quantile from bucket boundaries."""
+        counts = self._counts.get(_labels_key(labels))
+        if not counts:
+            return math.nan
+        total = sum(counts)
+        target = q * total
+        acc = 0
+        for b, c in zip(self.buckets, counts):
+            acc += c
+            if acc >= target:
+                return b
+        return self.buckets[-2]
+
+    def expose(self) -> list[str]:
+        out = [f"# HELP {self.name} {self.help}",
+               f"# TYPE {self.name} histogram"]
+        for key, counts in sorted(self._counts.items()):
+            labels = dict(key)
+            acc = 0
+            for b, c in zip(self.buckets, counts):
+                acc += c
+                lb = dict(labels, le=("+Inf" if b == float("inf") else b))
+                out.append(f"{self.name}_bucket{_labels_text(lb)} {acc}")
+            out.append(f"{self.name}_sum{_labels_text(labels)} "
+                       f"{self._sum[key]}")
+            out.append(f"{self.name}_count{_labels_text(labels)} {acc}")
+        return out
+
+
+class MetricsRegistry:
+    """One per process (or per Cluster); hand it to anything that reports."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, help_: str, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, help_, **kw)
+                self._metrics[name] = m
+            assert isinstance(m, cls), f"{name} registered as {type(m)}"
+            return m
+
+    def counter(self, name: str, help_: str = "") -> Counter:
+        return self._get(Counter, name, help_)
+
+    def gauge(self, name: str, help_: str = "") -> Gauge:
+        return self._get(Gauge, name, help_)
+
+    def histogram(self, name: str, help_: str = "",
+                  buckets=_DEFAULT_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, help_, buckets=buckets)
+
+    def expose(self) -> str:
+        """Prometheus text exposition format (what :9090 would scrape)."""
+        lines = []
+        for name in sorted(self._metrics):
+            lines.extend(self._metrics[name].expose())
+        return "\n".join(lines) + "\n"
+
+    def dashboard(self, width: int = 60) -> str:
+        """ASCII Grafana: one bar per gauge/counter series."""
+        rows = []
+        vals = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if isinstance(m, (Counter, Gauge)):
+                for key, v in sorted(m._vals.items()):
+                    vals.append((f"{name}{_labels_text(dict(key))}", v))
+        peak = max((abs(v) for _, v in vals), default=1.0) or 1.0
+        for label, v in vals:
+            bar = "#" * int(width * abs(v) / peak)
+            rows.append(f"{label:<44} {v:>12.3f} |{bar}")
+        return "\n".join(rows)
+
+
+@dataclass
+class Timer:
+    """``with registry.timer(...)``-style latency helper."""
+    hist: Histogram
+    labels: dict = field(default_factory=dict)
+    _t0: Optional[float] = None
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.hist.observe(time.perf_counter() - self._t0, **self.labels)
+        return False

@@ -1,0 +1,11 @@
+from repro.optim.adamw import (
+    OptimizerConfig,
+    abstract_opt_state,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+
+__all__ = ["OptimizerConfig", "abstract_opt_state", "adamw_update",
+           "global_norm", "init_opt_state", "lr_schedule"]

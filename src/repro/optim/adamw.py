@@ -1,0 +1,96 @@
+"""AdamW from scratch (no optax) with global-norm clipping and
+warmup+cosine schedule.  Optimizer state dtype is configurable so very
+large models (jamba-398b) can run bf16 m/v under the single-pod HBM budget
+(see DESIGN.md napkin math); ZeRO placement comes from core.sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+
+def lr_schedule(step, opt: OptimizerConfig):
+    step = step.astype(jnp.float32)
+    warm = opt.peak_lr * step / max(opt.warmup_steps, 1)
+    prog = jnp.clip((step - opt.warmup_steps)
+                    / max(opt.decay_steps - opt.warmup_steps, 1), 0.0, 1.0)
+    cos = opt.min_lr_ratio + (1 - opt.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < opt.warmup_steps, warm, opt.peak_lr * cos)
+
+
+def init_opt_state(params, opt: OptimizerConfig):
+    dt = jnp.dtype(opt.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params, opt: OptimizerConfig):
+    dt = jnp.dtype(opt.state_dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {
+        "m": jax.tree.map(sds, abstract_params),
+        "v": jax.tree.map(sds, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params, grads, state, opt: OptimizerConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / (gnorm + 1e-9))
+    lr = lr_schedule(step, opt)
+    dt = jnp.dtype(opt.state_dtype)
+    b1c = 1 - opt.b1 ** step.astype(jnp.float32)
+    b2c = 1 - opt.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * opt.b1 + g * (1 - opt.b1)
+        v32 = v.astype(jnp.float32) * opt.b2 + jnp.square(g) * (1 - opt.b2)
+        mh = m32 / b1c
+        vh = v32 / b2c
+        delta = mh / (jnp.sqrt(vh) + opt.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + opt.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,5 @@
+from repro.serving.engine import DecodeEngine, Request
+from repro.serving.serve_step import make_serve_step, serve_step_lowering_args
+
+__all__ = ["DecodeEngine", "Request", "make_serve_step",
+           "serve_step_lowering_args"]

@@ -1,0 +1,164 @@
+"""Batched decode engine: slot-based continuous batching over a shared KV
+cache (the TensorRT-role module from DESIGN.md's assumption log).
+
+A fixed number of *slots* share one batched cache pytree.  Requests queue;
+when a slot frees, the next request is prefilled (its cache slice written
+into the batch cache at the slot index) and joins the batched one-token
+decode loop.  Finished sequences (EOS or max_new_tokens) free their slot
+immediately — the engine never waits for the whole batch, which is the
+throughput property continuous batching exists for.
+
+Per-slot position bookkeeping lives host-side; the batched decode step is a
+single jitted call per token across all active slots.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import init_cache, init_params, prefill
+from repro.models.model import decode_step
+from repro.monitoring import MetricsRegistry
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (P,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    temperature: float = 0.0           # 0 => greedy
+    # filled by the engine
+    output: list = field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, params, num_slots: int = 8,
+                 cache_len: int = 1024, run: Optional[RunConfig] = None,
+                 metrics: Optional[MetricsRegistry] = None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.run = run or RunConfig(remat="none")
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.metrics = metrics or MetricsRegistry()
+        self.cache = init_cache(cfg, num_slots, cache_len)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[Optional[Request]] = [None] * num_slots
+        self.pos = np.zeros(num_slots, np.int64)       # next position per slot
+        self.last_tok = np.zeros(num_slots, np.int32)
+        self.remaining = np.zeros(num_slots, np.int64)
+        self._key = jax.random.PRNGKey(seed)
+        self._step = self._build_step()
+
+    # ------------------------------------------------------------ jitted ----
+    def _build_step(self):
+        cfg, run = self.cfg, self.run
+
+        @jax.jit
+        def step(params, cache, token, pos):
+            # per-slot positions: (B,) — decode_step handles scalar or vector
+            logits, cache = decode_step(params, cache, token, pos, cfg, run)
+            return logits[:, 0], cache
+
+        return step
+
+    # ------------------------------------------------------------ public ----
+    def submit(self, req: Request):
+        assert len(req.prompt) < self.cache_len, "prompt exceeds cache"
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def _admit(self):
+        """Prefill queued requests into free slots."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            with_timer = self.metrics.histogram(
+                "serve_prefill_seconds", "prefill latency")
+            import time
+            t0 = time.perf_counter()
+            logits, cache1 = prefill(
+                self.params, {"tokens": prompt}, self.cfg, self.run,
+                cache_len=self.cache_len)
+            with_timer.observe(time.perf_counter() - t0)
+            # write this request's cache slice into the batch cache
+            def put(batch_leaf, one_leaf):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    batch_leaf, one_leaf.astype(batch_leaf.dtype), slot,
+                    axis=1)
+            self.cache = jax.tree.map(put, self.cache, cache1)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.output.append(tok)
+            self.slots[slot] = req
+            self.pos[slot] = len(req.prompt)
+            self.last_tok[slot] = tok
+            self.remaining[slot] = req.max_new_tokens - 1
+            self.metrics.counter("serve_requests_admitted").inc()
+            self._maybe_finish(slot)
+
+    def _maybe_finish(self, slot: int):
+        req = self.slots[slot]
+        if req is None:
+            return
+        if (req.eos_id is not None and req.output
+                and req.output[-1] == req.eos_id) or self.remaining[slot] <= 0 \
+                or self.pos[slot] >= self.cache_len - 1:
+            req.done = True
+            self.slots[slot] = None
+            self.metrics.counter("serve_requests_completed").inc()
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        """Per-slot sampling.  logits: (num_slots, V)."""
+        temps = np.array([
+            (self.slots[i].temperature if self.slots[i] else 0.0)
+            for i in range(self.num_slots)], np.float32)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        if (temps <= 0).all():
+            return greedy.astype(np.int32)
+        self._key, sub = jax.random.split(self._key)
+        t = jnp.maximum(jnp.asarray(temps), 1e-4)[:, None]
+        sampled = np.asarray(
+            jax.random.categorical(sub, logits / t, axis=-1))
+        return np.where(temps > 0, sampled, greedy).astype(np.int32)
+
+    def step(self) -> int:
+        """Admit + one batched decode token.  Returns #active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        token = jnp.asarray(self.last_tok[:, None])
+        pos = jnp.asarray(self.pos.astype(np.int32))
+        import time
+        t0 = time.perf_counter()
+        logits, self.cache = self._step(self.params, self.cache, token, pos)
+        self.metrics.histogram("serve_decode_seconds",
+                               "batched decode-step latency").observe(
+            time.perf_counter() - t0)
+        nxt = self._sample(logits)
+        for i in active:
+            req = self.slots[i]
+            req.output.append(int(nxt[i]))
+            self.pos[i] += 1
+            self.last_tok[i] = nxt[i]
+            self.remaining[i] -= 1
+            self._maybe_finish(i)
+        self.metrics.counter("serve_tokens_generated").inc(len(active))
+        return len([r for r in self.slots if r is not None]) + len(self.queue)
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break

@@ -1,0 +1,53 @@
+"""Serve-step builder: the decode analogue of training.train_step.
+
+``decode_32k`` / ``long_500k`` dry-run shapes lower exactly this function —
+ONE new token against a seq_len KV cache.  Shardings follow
+core.sharding.cache_shardings (batch over data axes, heads over model;
+at global_batch=1 the state shards over `model` only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import InputShape, ModelConfig, RunConfig
+from repro.core import sharding as shd
+from repro.core.actshard import activation_sharding
+from repro.models import abstract_params, init_cache
+from repro.models.model import decode_step
+
+
+def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                    batch: int, cache_len: int):
+    """Returns jitted f(params, cache, token, pos) -> (logits, cache)."""
+    p_sh = shd.param_shardings(cfg, mesh, run)
+    cache_abs = init_cache(cfg, batch, cache_len, abstract=True)
+    c_sh = shd.cache_shardings(cfg, mesh, run, cache_abs)
+    act_rules = shd.make_activation_rules(cfg, mesh, run)
+
+    def step(params, cache, token, pos):
+        with activation_sharding(act_rules):
+            return decode_step(params, cache, token, pos, cfg, run)
+
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh, None, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+
+
+def serve_step_lowering_args(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                             shape: InputShape):
+    """Abstract (params, cache, token, pos) for ``.lower()``."""
+    B = shape.global_batch
+    ap = abstract_params(cfg)
+    cache_abs = init_cache(cfg, B, shape.seq_len, abstract=True)
+    c_sh = shd.cache_shardings(cfg, mesh, run, cache_abs)
+    cache = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        cache_abs, c_sh)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return ap, cache, token, pos

@@ -1,0 +1,8 @@
+from repro.training.train_step import (
+    make_train_step,
+    train_step_lowering_args,
+)
+from repro.training.trainer import Trainer, TrainerConfig
+
+__all__ = ["make_train_step", "train_step_lowering_args", "Trainer",
+           "TrainerConfig"]

@@ -1,0 +1,160 @@
+"""Train-step builder: loss + grad (+ microbatch accumulation, the paper's
+gradient-accumulation knob), ZeRO grad constraints, AdamW update — jitted
+with explicit in/out shardings for a given (config, run, mesh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, RunConfig
+from repro.core import sharding as shd
+from repro.core import zero
+from repro.core.actshard import activation_sharding
+from repro.models import abstract_params, input_specs
+from repro.models.model import loss_fn
+from repro.optim import (
+    OptimizerConfig, abstract_opt_state, adamw_update,
+)
+
+METRIC_KEYS = ("loss", "xent", "moe_balance_loss", "moe_z_loss",
+               "grad_norm", "lr")
+
+
+def _split_micro(batch: dict, n: int, mesh: Mesh, baxes) -> dict:
+    """(B, ...) -> (n, B//n, ...) on every batch leaf.
+
+    The reshape must be re-constrained to keep the microbatch dim
+    replicated and the batch dim sharded — unconstrained, GSPMD propagates
+    a layout that makes every microbatch recompute at full-batch cost
+    (measured 2x flops on a toy; see EXPERIMENTS.md §Perf notes).
+    """
+    def sp(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        xm = x.reshape((n, B // n) + x.shape[1:])
+        spec = P(None, baxes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            xm, NamedSharding(mesh, spec))
+    return {k: sp(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                    opt: OptimizerConfig):
+    """Returns f(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    act_rules = shd.make_activation_rules(cfg, mesh, run)
+    p_sh_inner = shd.param_shardings(cfg, mesh, run)
+
+    def step(params, opt_state, batch):
+        with activation_sharding(act_rules):
+            return _step(params, opt_state, batch)
+
+    def _loss_params(params):
+        """Beyond-paper (run.gather_bf16, §Perf): cast the f32 master
+        shards to bf16 BEFORE the ZeRO-3 all-gather — the cast is local to
+        the shard, so the gather moves half the bytes.  The constraint pins
+        the bf16 copy to the sharded layout so XLA can't hoist the cast
+        past the gather."""
+        if not run.gather_bf16:
+            return params
+        return jax.tree.map(
+            lambda p, s: jax.lax.with_sharding_constraint(
+                p.astype(jnp.bfloat16), s) if p.dtype == jnp.float32 else p,
+            params, p_sh_inner)
+
+    def _step(params, opt_state, batch):
+        n = run.microbatches
+
+        def _loss(p, mb):
+            return loss_fn(_loss_params(p), mb, cfg, run)
+
+        if n == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                _loss, has_aux=True)(params, batch)
+        else:
+            from repro.core.parallelism import get_strategy
+            baxes = shd.batch_partition(
+                mesh, batch[next(iter(batch))].shape[0] // n,
+                get_strategy(run.strategy))
+            micro = _split_micro(batch, n, mesh, baxes)
+
+            def body(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = jax.value_and_grad(_loss, has_aux=True)(
+                    params, mb)
+                if run.grad_reduce_bf16:
+                    # cast BEFORE the layout constraint so the cross-data
+                    # reduction moves bf16, not f32 (§Perf-2)
+                    g = jax.tree.map(lambda x: x.astype(jnp.bfloat16), g)
+                g = jax.tree.map(
+                    lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                    g, g_sh)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                m_acc = {k: m_acc[k] + m[k] for k in m_acc}
+                return (g_acc, m_acc), None
+
+            # accumulate in the ZeRO grad layout from step one — an
+            # unconstrained f32 accumulator replicates (12.7 GB/device on
+            # starcoder2-3b; see EXPERIMENTS.md §Perf).  grad_reduce_bf16
+            # also accumulates in bf16 (~1 extra bit of rounding over 16
+            # microbatches; halves the accumulator's 8.2 GB/device on
+            # dbrx-132b — §Perf-3).
+            acc_dt = (jnp.bfloat16 if run.grad_reduce_bf16
+                      else jnp.float32)
+            g_sh = zero.grad_shardings(cfg, mesh, run)
+            g0 = jax.tree.map(
+                lambda p, s: jax.lax.with_sharding_constraint(
+                    jnp.zeros(p.shape, acc_dt), s), params, g_sh)
+            m0 = {k: jnp.zeros((), jnp.float32)
+                  for k in ("loss", "xent", "moe_balance_loss", "moe_z_loss")}
+            if run.unroll:
+                carry = (g0, m0)
+                for i in range(n):
+                    carry, _ = body(carry,
+                                    {k: v[i] for k, v in micro.items()})
+                grads, metrics = carry
+            else:
+                (grads, metrics), _ = jax.lax.scan(
+                    body, (g0, m0), jax.tree.map(lambda x: x, micro))
+            grads = jax.tree.map(lambda g: g / n, grads)
+            metrics = {k: v / n for k, v in metrics.items()}
+
+        grads = zero.constrain_grads(grads, cfg, mesh, run)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    p_sh = shd.param_shardings(cfg, mesh, run)
+    o_sh = {
+        "m": shd.opt_shardings(cfg, mesh, run),
+        "v": shd.opt_shardings(cfg, mesh, run),
+        "step": shd.replicated(mesh),
+    }
+    metric_sh = {k: shd.replicated(mesh) for k in METRIC_KEYS}
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, None),
+        out_shardings=(p_sh, o_sh, metric_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+def train_step_lowering_args(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                             shape: InputShape, opt: OptimizerConfig):
+    """Abstract (params, opt_state, batch) for ``.lower()`` — no allocation."""
+    ap = abstract_params(cfg)
+    ao = abstract_opt_state(ap, opt)
+    specs = input_specs(cfg, shape)
+    b_sh = shd.batch_shardings(cfg, mesh, run, specs)
+    batch = {
+        k: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=b_sh[k])
+        for k, s in specs.items()
+    }
+    return ap, ao, batch

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real device
+count (1 CPU); only launch/dryrun.py fakes 512 devices."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def cpu_mesh():
+    from repro.launch.mesh import make_mesh
+    return make_mesh(1, 1)

@@ -1,0 +1,172 @@
+"""SLURM command surface (§5.2.1 tables), provisioning/validation (§4),
+monitoring (§6), and the allocation->Mesh bridge."""
+import jax
+import pytest
+
+from repro.cluster import (
+    Cluster, JobState, Node, NodeState, Partition, ResourceRequest,
+    commands, provision, tpu_pod_spec, validate,
+)
+from repro.cluster.meshbridge import factor_mesh, mesh_for_job
+from repro.monitoring import MetricsRegistry
+
+
+@pytest.fixture()
+def pod():
+    spec = tpu_pod_spec(hosts_x=4, hosts_y=4)      # 16 hosts x 4 chips
+    return provision(spec), spec
+
+
+# ------------------------------------------------------------- commands ----
+
+def test_sinfo_lists_partitions_and_states(pod):
+    c, _ = pod
+    out = commands.sinfo(c)
+    assert "PARTITION" in out and "idle" in out
+    c.submit("a", ResourceRequest(nodes=16, gres_per_node={"tpu": 4}),
+             run_time_s=10)
+    out = commands.sinfo(c)
+    assert "alloc" in out
+
+
+def test_squeue_shows_running_and_pending(pod):
+    c, _ = pod
+    c.submit("big", ResourceRequest(nodes=16, gres_per_node={"tpu": 4}),
+             run_time_s=10)
+    c.submit("queued", ResourceRequest(nodes=2, gres_per_node={"tpu": 4}),
+             run_time_s=10)
+    out = commands.squeue(c)
+    assert " R " in out and " PD " in out
+    assert "big" in out and "queued" in out
+
+
+def test_sbatch_parses_slurm_script_options(pod):
+    c, _ = pod
+    msg = commands.sbatch(c, name="deep_learning_job", nodes=1,
+                          gres="tpu:4", mem="32G", time="24:00:00",
+                          cpus_per_task=8)
+    jid = int(msg.split()[-1])
+    job = c.jobs[jid]
+    assert job.req.gres_per_node == {"tpu": 4}
+    assert job.req.mem_mb_per_node == 32 * 1024
+    assert job.req.time_limit_s == 24 * 3600
+    assert job.req.cpus_per_node == 8
+
+
+def test_srun_runs_script_and_returns_result(pod):
+    c, _ = pod
+    c.real_mode = True
+    out = commands.srun(c, lambda job, alloc: f"hello from {len(alloc)}",
+                        nodes=2)
+    assert "hello from 2" in str(out)
+
+
+def test_scancel_and_scontrol(pod):
+    c, _ = pod
+    (jid,) = c.submit("x", ResourceRequest(nodes=1,
+                                           gres_per_node={"tpu": 4}),
+                      run_time_s=100)
+    show = commands.scontrol_show_job(c, jid)
+    assert f"JobId={jid}" in show and "RUNNING" in show
+    commands.scancel(c, jid)
+    assert c.jobs[jid].state == JobState.CANCELLED
+    nodes_out = commands.scontrol_show_nodes(c)
+    assert "NodeName=" in nodes_out
+
+
+def test_scontrol_update_node_drain(pod):
+    c, _ = pod
+    name = next(iter(c.nodes))
+    commands.scontrol_update_node(c, name, "drain", reason="maintenance")
+    assert c.nodes[name].state == NodeState.DRAIN
+
+
+def test_sacct_reports_history(pod):
+    c, _ = pod
+    c.submit("done", ResourceRequest(nodes=1, gres_per_node={"tpu": 4}),
+             run_time_s=5)
+    c.run()
+    out = commands.sacct(c)
+    assert "done" in out and "COMPLETED" in out
+
+
+# ---------------------------------------------------------- provisioning ----
+
+def test_tpu_pod_spec_topology():
+    spec = tpu_pod_spec(hosts_x=8, hosts_y=8)
+    assert len(spec.hosts) == 64
+    coords = {h.coord for h in spec.hosts}
+    assert coords == {(x, y) for x in range(8) for y in range(8)}
+
+
+def test_validation_passes_on_healthy_cluster(pod):
+    c, spec = pod
+    report = validate(c, spec)
+    assert report.ok, str(report)
+
+
+def test_validation_catches_down_node(pod):
+    c, spec = pod
+    c.set_node_state(next(iter(c.nodes)), NodeState.DOWN, "dead")
+    report = validate(c, spec)
+    assert not report.ok
+
+
+# ------------------------------------------------------------ meshbridge ----
+
+def test_factor_mesh():
+    assert factor_mesh(16, 4) == (4, 4)
+    assert factor_mesh(16, 1) == (16, 1)
+    assert factor_mesh(12, 8) == (3, 4)     # gcd fallback
+
+
+def test_mesh_for_job_builds_jax_mesh(pod):
+    c, _ = pod
+    c.real_mode = False
+    (jid,) = c.submit("m", ResourceRequest(nodes=4,
+                                           gres_per_node={"tpu": 4}),
+                      run_time_s=100)
+    mesh = mesh_for_job(c, c.jobs[jid], model_parallel=1)
+    assert set(mesh.axis_names) == {"data", "model"}
+    assert mesh.devices.size >= 1              # folded onto available devices
+
+
+# ------------------------------------------------------------ monitoring ----
+
+def test_metrics_counter_gauge_histogram():
+    m = MetricsRegistry()
+    m.counter("jobs_total", "jobs").inc()
+    m.counter("jobs_total").inc(2, partition="gpu")
+    m.gauge("util").set(0.5)
+    m.histogram("lat").observe(0.1)
+    m.histogram("lat").observe(0.9)
+    assert m.counter("jobs_total").value() == 1
+    assert m.counter("jobs_total").value(partition="gpu") == 2
+    assert m.gauge("util").value() == 0.5
+    assert m.histogram("lat").count() == 2
+    text = m.expose()
+    # prometheus exposition format
+    assert "# TYPE jobs_total counter" in text
+    assert 'jobs_total{partition="gpu"} 2' in text
+    assert "lat_bucket" in text and 'le="+Inf"' in text
+
+
+def test_metrics_quantile_and_dashboard():
+    m = MetricsRegistry()
+    for i in range(100):
+        m.histogram("s").observe(i / 100.0)
+    q = m.histogram("s").quantile(0.5)
+    assert 0.3 <= q <= 0.8
+    m.gauge("cluster_util").set(0.75)
+    dash = m.dashboard()
+    assert "cluster_util" in dash and "#" in dash
+
+
+def test_cluster_metrics_hook(pod):
+    c, _ = pod
+    c.metrics = MetricsRegistry()
+    c.submit("a", ResourceRequest(nodes=1, gres_per_node={"tpu": 4}),
+             run_time_s=5)
+    assert c.metrics.gauge("slurm_jobs_running").value() == 1
+    c.run()
+    assert c.metrics.gauge("slurm_jobs_running").value() == 0

@@ -1,0 +1,197 @@
+"""Serving tests: prefill+decode consistency vs the training forward,
+sliding-window ring cache, SSM recurrent decode, and the continuous-batching
+engine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_reduced_config
+from repro.models import init_cache, init_params
+from repro.models.model import decode_step, forward_train, prefill
+from repro.serving import DecodeEngine, Request
+
+RUN = RunConfig(strategy="dp", microbatches=1, remat="none")
+
+
+def _greedy_reference(params, tokens, cfg, n_new):
+    """Teacher-forced greedy continuation using only forward_train."""
+    toks = list(np.asarray(tokens))
+    out = []
+    for _ in range(n_new):
+        batch = {"tokens": jnp.asarray(toks, jnp.int32)[None]}
+        logits, _ = forward_train(params, batch, cfg, RUN)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+@pytest.mark.parametrize("arch_id", ["stablelm-3b", "mamba2-780m",
+                                     "jamba-1.5-large-398b"])
+def test_prefill_decode_matches_forward(arch_id):
+    """KV/SSM-cache decode == teacher-forced forward, token for token."""
+    cfg = get_reduced_config(arch_id)
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    n_new = 6
+
+    ref = _greedy_reference(params, prompt, cfg, n_new)
+
+    logits, cache = prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                            cfg, RUN, cache_len=64)
+    got = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    tok = jnp.asarray([[got[-1]]], jnp.int32)
+    for _ in range(n_new - 1):
+        logits, cache = decode_step(params, cache, tok,
+                                    jnp.asarray(pos, jnp.int32), cfg, RUN)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        got.append(nxt)
+        tok = jnp.asarray([[nxt]], jnp.int32)
+        pos += 1
+    assert got == ref, (arch_id, got, ref)
+
+
+def test_sliding_window_ring_cache_decode():
+    """With a window the ring cache must reproduce windowed attention
+    exactly even after wrapping around."""
+    cfg = dataclasses.replace(get_reduced_config("stablelm-3b"),
+                              sliding_window=8)
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    n_new = 10                                # wraps the 8-slot ring
+
+    ref = _greedy_reference(params, prompt, cfg, n_new)
+
+    logits, cache = prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                            cfg, RUN, cache_len=64)
+    assert cache["layers"][0]["k"].shape[2] == 8   # ring has window slots
+    got = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    tok = jnp.asarray([[got[-1]]], jnp.int32)
+    for _ in range(n_new - 1):
+        logits, cache = decode_step(params, cache, tok,
+                                    jnp.asarray(pos, jnp.int32), cfg, RUN)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        got.append(nxt)
+        tok = jnp.asarray([[nxt]], jnp.int32)
+        pos += 1
+    assert got == ref, (got, ref)
+
+
+def test_vector_positions_enable_mixed_depth_decode():
+    """decode_step takes (B,) positions — slots at different depths."""
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(2)
+    pa = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+
+    # singleton decodes
+    outs = {}
+    for name, pr in (("a", pa), ("b", pb)):
+        logits, cache = prefill(params, {"tokens": jnp.asarray(pr)[None]},
+                                cfg, RUN, cache_len=32)
+        tok = int(jnp.argmax(logits[0, -1]))
+        logits, _ = decode_step(params, cache,
+                                jnp.asarray([[tok]], jnp.int32),
+                                jnp.asarray(len(pr), jnp.int32), cfg, RUN)
+        outs[name] = int(jnp.argmax(logits[0, -1]))
+
+    # batched mixed-depth decode
+    cache = init_cache(cfg, 2, 32)
+    for i, pr in enumerate((pa, pb)):
+        _, c1 = prefill(params, {"tokens": jnp.asarray(pr)[None]}, cfg, RUN,
+                        cache_len=32)
+        cache = jax.tree.map(
+            lambda b, o: jax.lax.dynamic_update_slice_in_dim(
+                b, o.astype(b.dtype), i, axis=1), cache, c1)
+    toks = []
+    for pr in (pa, pb):
+        logits, _ = prefill(params, {"tokens": jnp.asarray(pr)[None]}, cfg,
+                            RUN, cache_len=32)
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    logits, _ = decode_step(
+        params, cache, jnp.asarray(toks, jnp.int32)[:, None],
+        jnp.asarray([len(pa), len(pb)], jnp.int32), cfg, RUN)
+    assert int(jnp.argmax(logits[0, -1])) == outs["a"]
+    assert int(jnp.argmax(logits[1, -1])) == outs["b"]
+
+
+# ---------------------------------------------------------------- engine ----
+
+def test_engine_greedy_matches_reference():
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    ref = _greedy_reference(params, prompt, cfg, 5)
+
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=5)
+    eng.submit(req)
+    eng.run_to_completion()
+    assert req.done and req.output == ref, (req.output, ref)
+
+
+def test_engine_continuous_batching_slot_reuse():
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(4)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 4 + i).astype(
+                        np.int32),
+                    max_new_tokens=3 + i % 3)
+            for i in range(5)]
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert len(r.output) == r.max_new_tokens
+    # 5 requests through 2 slots: admissions == completions == 5
+    assert eng.metrics.counter("serve_requests_admitted").value() == 5
+    assert eng.metrics.counter("serve_requests_completed").value() == 5
+
+
+def test_engine_isolation_between_slots():
+    """A request's output must not depend on what shares the batch."""
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+
+    solo = Request(rid=0, prompt=prompt, max_new_tokens=4)
+    eng1 = DecodeEngine(cfg, params, num_slots=2, cache_len=64)
+    eng1.submit(solo)
+    eng1.run_to_completion()
+
+    other = Request(rid=1,
+                    prompt=rng.integers(0, cfg.vocab_size, 11).astype(
+                        np.int32), max_new_tokens=6)
+    shared = Request(rid=2, prompt=prompt, max_new_tokens=4)
+    eng2 = DecodeEngine(cfg, params, num_slots=2, cache_len=64)
+    eng2.submit(other)
+    eng2.submit(shared)
+    eng2.run_to_completion()
+    assert shared.output == solo.output
+
+
+def test_engine_eos_frees_slot_early():
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    # pick the first greedy token as "EOS" so it stops after 1 token
+    ref = _greedy_reference(params, prompt, cfg, 1)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=50, eos_id=ref[0])
+    eng = DecodeEngine(cfg, params, num_slots=1, cache_len=64)
+    eng.submit(req)
+    eng.run_to_completion()
+    assert req.done and len(req.output) == 1

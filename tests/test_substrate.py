@@ -1,0 +1,154 @@
+"""Substrate tests: data pipeline, checkpoint store, optimizer, serving
+engine — the paper's §5.2.4 workload pieces."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_reduced_config
+from repro.configs.base import InputShape
+from repro.data import DataConfig, PackedStream, PrefetchLoader
+from repro import checkpoint as ckpt
+from repro.models import init_params, make_batch
+from repro.optim import OptimizerConfig, adamw_update, init_opt_state, \
+    lr_schedule
+
+
+# ----------------------------------------------------------------- data ----
+
+def test_stream_deterministic_across_instances():
+    cfg = DataConfig(vocab_size=512, seq_len=128, global_batch=4, seed=7)
+    a = [PackedStream(cfg).next_batch() for _ in range(1)][0]
+    b = [PackedStream(cfg).next_batch() for _ in range(1)][0]
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_stream_seeds_differ():
+    c1 = DataConfig(vocab_size=512, seq_len=128, global_batch=4, seed=1)
+    c2 = DataConfig(vocab_size=512, seq_len=128, global_batch=4, seed=2)
+    assert not np.array_equal(PackedStream(c1).next_batch()["tokens"],
+                              PackedStream(c2).next_batch()["tokens"])
+
+
+def test_prefetch_loader_matches_stream():
+    cfg = DataConfig(vocab_size=512, seq_len=64, global_batch=2, seed=3)
+    direct = PackedStream(cfg)
+    want = [direct.next_batch()["tokens"] for _ in range(4)]
+    loader = PrefetchLoader(PackedStream(cfg), depth=2)
+    got = [next(loader)["tokens"] for _ in range(4)]
+    loader.close()
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_loss_mask_is_all_ones_for_lm():
+    cfg = DataConfig(vocab_size=512, seq_len=64, global_batch=2, seed=0)
+    b = PackedStream(cfg).next_batch()
+    assert b["loss_mask"].shape == (2, 64)
+    assert set(np.unique(b["loss_mask"])) <= {0.0, 1.0}
+
+
+# ------------------------------------------------------------ checkpoint ----
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    ckpt.save(str(tmp_path), 10, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    got, ds = ckpt.restore(str(tmp_path), tree)
+    assert ds is None
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+    assert got["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_keeps_latest_and_gc(tmp_path):
+    tree = {"w": jnp.zeros((2,))}
+    for step in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), step, tree, keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    steps = sorted(int(d.split("_")[-1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_restores_specific_step(tmp_path):
+    for step in (1, 2):
+        ckpt.save(str(tmp_path), step,
+                  {"w": jnp.full((2,), float(step))})
+    got, _ = ckpt.restore(str(tmp_path), {"w": jnp.zeros((2,))}, step=1)
+    np.testing.assert_array_equal(np.asarray(got["w"]), [1.0, 1.0])
+
+
+def test_checkpoint_data_state_roundtrip(tmp_path):
+    tree = {"w": jnp.zeros((2,))}
+    ds = {"doc": np.int64(42), "buf": np.arange(5)}
+    ckpt.save(str(tmp_path), 1, tree, data_state=ds)
+    _, got = ckpt.restore(str(tmp_path), tree)
+    assert int(got["doc"]) == 42
+    np.testing.assert_array_equal(got["buf"], np.arange(5))
+
+
+# -------------------------------------------------------------- optimizer ----
+
+def test_lr_schedule_warmup_and_decay():
+    opt = OptimizerConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(lr_schedule(jnp.asarray(0), opt)) < 1e-4
+    np.testing.assert_allclose(float(lr_schedule(jnp.asarray(10), opt)),
+                               1e-3, rtol=1e-6)
+    np.testing.assert_allclose(float(lr_schedule(jnp.asarray(100), opt)),
+                               1e-4, rtol=1e-5)      # cosine floor
+
+
+def test_adamw_matches_manual_reference():
+    opt = OptimizerConfig(peak_lr=1e-2, warmup_steps=0, decay_steps=10_000,
+                          b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.1,
+                          clip_norm=1e9)
+    p = {"w": jnp.asarray([[1.0, -2.0]])}            # 2-D => weight decay
+    g = {"w": jnp.asarray([[0.5, 0.5]])}
+    state = init_opt_state(p, opt)
+    new_p, new_state, metrics = adamw_update(p, g, state, opt)
+
+    # manual AdamW, step 1 (bias-corrected)
+    lr = float(lr_schedule(jnp.asarray(1), opt))
+    m = 0.1 * 0.5 / (1 - 0.9)
+    v = 0.001 * 0.25 / (1 - 0.999)
+    want = np.asarray([[1.0, -2.0]]) - lr * (
+        m / (np.sqrt(v) + 1e-8) + 0.1 * np.asarray([[1.0, -2.0]]))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+    assert int(new_state["step"]) == 1
+
+
+def test_grad_clip_bounds_update():
+    opt = OptimizerConfig(peak_lr=1.0, warmup_steps=0, decay_steps=100,
+                          clip_norm=1.0, weight_decay=0.0)
+    p = {"w": jnp.zeros((3,))}
+    g = {"w": jnp.asarray([30.0, 40.0, 0.0])}     # norm 50 -> scaled by 1/50
+    state = init_opt_state(p, opt)
+    _, _, metrics = adamw_update(p, g, state, opt)
+    np.testing.assert_allclose(float(metrics["grad_norm"]), 50.0, rtol=1e-5)
+
+
+def test_loss_decreases_over_short_run(cpu_mesh):
+    """§5.2.4 acceptance: the training job actually learns."""
+    from repro.training import make_train_step
+    cfg = get_reduced_config("stablelm-3b")
+    opt = OptimizerConfig(peak_lr=3e-3, warmup_steps=5, decay_steps=200)
+    run = RunConfig(strategy="dp", microbatches=1, remat="none")
+    step = make_train_step(cfg, run, cpu_mesh, opt)
+    params = init_params(cfg, 0)
+    state = init_opt_state(params, opt)
+    shape = InputShape("t", 64, 4, "train")
+    from repro.data import DataConfig, PackedStream
+    stream = PackedStream(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                     global_batch=4, seed=0))
+    losses = []
+    for _ in range(12):
+        batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    # synthetic-LM signal is mostly unigram stats: expect a steady, modest
+    # drop (measured ~0.18 over 12 steps at this lr)
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.08, losses

@@ -1,0 +1,149 @@
+"""End-to-end system tests: the full paper workflow — provision a cluster
+(§4), submit DL jobs through SLURM commands (§5), run real JAX work through
+the Mesh bridge, monitor (§6), checkpoint/resume after a requeue."""
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    JobState, NodeState, ResourceRequest, commands, provision, tpu_pod_spec,
+    validate,
+)
+from repro.cluster.meshbridge import mesh_for_job
+from repro.configs import RunConfig, get_reduced_config
+from repro.configs.base import InputShape
+from repro.monitoring import MetricsRegistry
+from repro.optim import OptimizerConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+SHAPE = InputShape("e2e", 64, 2, "train")
+
+
+def _train_script(steps=4, ckpt_dir=None, metrics=None):
+    """The guide's §5.2.4 train.py, as a cluster job script."""
+    def script(job, alloc):
+        from repro.cluster.meshbridge import mesh_for_job
+        cfg = get_reduced_config("stablelm-3b")
+        run = RunConfig(strategy="dp", microbatches=1, remat="none")
+        mesh = mesh_for_job(script.cluster, job)
+        t = Trainer(cfg, run, mesh, SHAPE,
+                    OptimizerConfig(warmup_steps=2, decay_steps=50),
+                    TrainerConfig(steps=steps, log_every=100,
+                                  ckpt_every=2 if ckpt_dir else 0,
+                                  ckpt_dir=ckpt_dir),
+                    metrics=metrics)
+        history = t.train(log=lambda *_: None)
+        return history
+    return script
+
+
+def test_full_workflow_provision_submit_train_account():
+    # 1. provision (the paper's §4 DeepOps flow) + validate (§4 step 8)
+    spec = tpu_pod_spec(hosts_x=2, hosts_y=2)
+    cluster = provision(spec, real_mode=True)
+    report = validate(cluster, spec)
+    assert report.ok, str(report)
+
+    # 2. submit a real training job via sbatch (§5.2.3)
+    script = _train_script(steps=3)
+    script.cluster = cluster
+    msg = commands.sbatch(cluster, name="deep_learning_job", nodes=4,
+                          gres="tpu:4", mem="4G", time="01:00:00",
+                          script=script, run_time_s=60)
+    jid = int(msg.split()[-1])
+
+    # 3. the scheduler started it; the script ran through the Mesh bridge
+    job = cluster.jobs[jid]
+    assert job.state == JobState.RUNNING
+    assert job.exit_code == 0, job.comment
+    history = job.result
+    assert len(history) == 3
+    assert np.isfinite(history[-1]["loss"])
+
+    # 4. run to completion + sacct shows it (§6)
+    cluster.run()
+    out = commands.sacct(cluster)
+    assert "deep_learning_job" in out and "COMPLETED" in out
+
+
+def test_checkpoint_resume_after_requeue(tmp_path):
+    """Node drain -> requeue -> the job resumes from its checkpoint
+    (the guide's whole reason for checkpoints in §5.2.5)."""
+    cfg = get_reduced_config("stablelm-3b")
+    run = RunConfig(strategy="dp", microbatches=1, remat="none")
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh(1, 1)
+    opt = OptimizerConfig(warmup_steps=2, decay_steps=50)
+
+    # first incarnation: 4 steps, checkpoint every 2
+    t1 = Trainer(cfg, run, mesh, SHAPE, opt,
+                 TrainerConfig(steps=4, ckpt_every=2,
+                               ckpt_dir=str(tmp_path), log_every=100))
+    h1 = t1.train(log=lambda *_: None)
+
+    # continuous run to 8 steps (ground truth)
+    t_full = Trainer(cfg, run, mesh, SHAPE, opt,
+                     TrainerConfig(steps=8, log_every=100))
+    h_full = t_full.train(log=lambda *_: None)
+
+    # second incarnation ("requeued"): resumes at step 4, trains to 8
+    t2 = Trainer(cfg, run, mesh, SHAPE, opt,
+                 TrainerConfig(steps=8, ckpt_every=0,
+                               ckpt_dir=str(tmp_path), log_every=100))
+    h2 = t2.train(log=lambda *_: None)
+    assert t2.step == 8
+    assert h2[0]["step"] == 5                      # resumed, not restarted
+    # the resumed run reproduces the continuous run's loss trajectory
+    np.testing.assert_allclose(h2[-1]["loss"], h_full[-1]["loss"],
+                               rtol=1e-4)
+
+
+def test_job_failure_is_accounted_and_isolated():
+    spec = tpu_pod_spec(hosts_x=2, hosts_y=1)
+    cluster = provision(spec, real_mode=True)
+
+    def bad_script(job, alloc):
+        raise RuntimeError("OOM: tried to materialize the logits")
+
+    (jid,) = cluster.submit(
+        "crash", ResourceRequest(nodes=1, gres_per_node={"tpu": 4}),
+        script=bad_script, run_time_s=1)
+    assert cluster.jobs[jid].exit_code == 1
+    assert "OOM" in cluster.jobs[jid].comment
+    cluster.run()
+    assert cluster.jobs[jid].state == JobState.FAILED
+    # the cluster keeps serving other jobs
+    (ok,) = cluster.submit(
+        "fine", ResourceRequest(nodes=1, gres_per_node={"tpu": 4}),
+        run_time_s=1)
+    cluster.run()
+    assert cluster.jobs[ok].state == JobState.COMPLETED
+
+
+def test_metrics_flow_from_training_to_prometheus():
+    spec = tpu_pod_spec(hosts_x=1, hosts_y=1)
+    cluster = provision(spec, real_mode=True)
+    metrics = MetricsRegistry()
+    cluster.metrics = metrics
+
+    script = _train_script(steps=2, metrics=metrics)
+    script.cluster = cluster
+    commands.srun(cluster, script, nodes=1, gres="tpu:4")
+    text = metrics.expose()
+    assert "train_tokens" in text
+    assert "train_step_seconds_bucket" in text
+    assert metrics.counter("train_tokens").value() == 2 * 64 * 2
+
+
+def test_gang_scheduling_two_pods_share_cluster():
+    """Two jobs with disjoint rectangles run concurrently (the cluster
+    advantage of §2.4.4 'Collaboration and Scalability')."""
+    spec = tpu_pod_spec(hosts_x=4, hosts_y=2)
+    cluster = provision(spec)
+    (a,) = cluster.submit("a", ResourceRequest(
+        nodes=4, gres_per_node={"tpu": 4}), run_time_s=10)
+    (b,) = cluster.submit("b", ResourceRequest(
+        nodes=4, gres_per_node={"tpu": 4}), run_time_s=10)
+    assert cluster.jobs[a].state == JobState.RUNNING
+    assert cluster.jobs[b].state == JobState.RUNNING
+    assert not (set(cluster.jobs[a].nodes_alloc)
+                & set(cluster.jobs[b].nodes_alloc))
