@@ -76,6 +76,74 @@ def bench_backfill_modes(results: list):
     return out
 
 
+def bench_node_clone(results: list):
+    """The per-pass working copy: Node.clone() vs copy.deepcopy (the clone
+    replaced deepcopy in scheduler.schedule_pass)."""
+    import copy
+
+    from repro.cluster import Node
+    nodes = [Node(name=f"n{i:03d}", cpus=16, mem_mb=65536, gres={"tpu": 4},
+                  coord=(i // 8, i % 8)) for i in range(64)]
+    for n in nodes[::2]:
+        n.allocate(1, 4, 8192, {"tpu": 2})
+    reps = 200
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _ = {n.name: copy.deepcopy(n) for n in nodes}
+    t_deep = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _ = {n.name: n.clone() for n in nodes}
+    t_clone = time.perf_counter() - t0
+    results.append(("scheduler_node_clone_64_nodes", t_clone * 1e6 / reps,
+                    f"deepcopy={t_deep * 1e6 / reps:,.0f}us "
+                    f"speedup={t_deep / t_clone:.1f}x"))
+
+
+def bench_fairshare_scenario(results: list):
+    """Two accounts at a 10:1 share ratio submitting identical mixed-QOS
+    demand: report queue-wait fairness (mean wait per account) and the
+    scheduler pass latency under the multifactor engine."""
+    from repro.cluster import commands
+
+    c = _cluster(n_nodes=16)
+    commands.sacctmgr_add_account(c, "prod", fairshare=10)
+    commands.sacctmgr_add_account(c, "research", fairshare=1)
+    commands.sacctmgr_add_user(c, "alice", "prod")
+    commands.sacctmgr_add_user(c, "bob", "research")
+
+    rng = np.random.default_rng(2)
+    users = [("alice", "high"), ("alice", "normal"),
+             ("bob", "normal"), ("bob", "scavenger")]
+    t0 = time.perf_counter()
+    n_jobs = 120
+    for i in range(n_jobs):
+        user, qos = users[int(rng.integers(0, len(users)))]
+        n = int(rng.choice([1, 2, 4]))
+        c.submit(f"j{i}", ResourceRequest(
+            nodes=n, gres_per_node={"tpu": 4}, time_limit_s=7200),
+            run_time_s=float(rng.integers(60, 900)), user=user, qos=qos,
+            ckpt_interval_s=60.0)
+    stuck = c.run()
+    dt = time.perf_counter() - t0
+    assert not stuck, f"{len(stuck)} jobs never ran"
+
+    waits: dict[str, list[float]] = {"prod": [], "research": []}
+    final = {}
+    for r in c.accounting:              # last segment per job
+        final[r.job_id] = r
+    for r in final.values():
+        waits[r.account].append(r.start - r.submit)
+    mean = {a: (sum(w) / len(w) if w else 0.0) for a, w in waits.items()}
+    results.append((
+        "scheduler_fairshare_2acct_10to1",
+        dt * 1e6 / n_jobs,
+        f"wait prod={mean['prod']:,.0f}s research={mean['research']:,.0f}s "
+        f"preemptions={c.preemptions_total}"))
+
+
 def run(results: list):
     bench_scheduling_throughput(results)
     bench_backfill_modes(results)
+    bench_node_clone(results)
+    bench_fairshare_scenario(results)

@@ -1,6 +1,10 @@
 """Software-defined SLURM/DeepOps cluster: inventory, scheduler, job
-lifecycle, SLURM command surface, provisioning + validation, Mesh bridge."""
+lifecycle, SLURM command surface, provisioning + validation, Mesh bridge,
+and the multi-tenant policy layer (accounts, fair-share, QOS, preemption)."""
 from repro.cluster.cluster import AccountingRecord, Cluster
+from repro.cluster.fairshare import (
+    Account, FairShareTree, MultifactorPriority, PriorityWeights,
+)
 from repro.cluster.job import (
     Dependency, DependencyKind, Job, JobState, ResourceRequest,
 )
@@ -8,11 +12,13 @@ from repro.cluster.node import Node, NodeState, Partition
 from repro.cluster.provision import (
     ClusterSpec, HostSpec, PartitionSpec, provision, tpu_pod_spec, validate,
 )
+from repro.cluster.qos import QOS, default_qos_table
 from repro.cluster import commands
 
 __all__ = [
-    "AccountingRecord", "Cluster", "Dependency", "DependencyKind", "Job",
-    "JobState", "ResourceRequest", "Node", "NodeState", "Partition",
-    "ClusterSpec", "HostSpec", "PartitionSpec", "provision", "tpu_pod_spec",
-    "validate", "commands",
+    "Account", "AccountingRecord", "Cluster", "Dependency", "DependencyKind",
+    "FairShareTree", "Job", "JobState", "MultifactorPriority",
+    "PriorityWeights", "QOS", "ResourceRequest", "Node", "NodeState",
+    "Partition", "ClusterSpec", "HostSpec", "PartitionSpec",
+    "default_qos_table", "provision", "tpu_pod_spec", "validate", "commands",
 ]

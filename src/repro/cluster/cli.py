@@ -54,6 +54,34 @@ def main(argv=None) -> int:
 
     print("\n== sacct ==")
     print(C.sacct(cluster))
+
+    # ---- multi-tenant: accounts, QOS, fair-share, preemption (§3.2.3) ----
+    print(C.scontrol_update_node(cluster, "tpu-00-00", "idle"))
+    cluster.run()                       # drain the single-tenant backlog
+
+    print("\n== sacctmgr: two tenants sharing the pod ==")
+    print(C.sacctmgr_add_account(cluster, "prod", fairshare=10))
+    print(C.sacctmgr_add_account(cluster, "research", fairshare=1))
+    C.sacctmgr_add_user(cluster, "alice", "prod")
+    C.sacctmgr_add_user(cluster, "bob", "research")
+    print(C.sacctmgr_show_qos(cluster))
+
+    print("\n== scavenger fills idle capacity; prod preempts ==")
+    print(C.sbatch(cluster, name="bg-sweep", nodes=args.hosts ** 2,
+                   gres="tpu:4", time="04:00:00", run_time_s=7200,
+                   user="bob", qos="scavenger", ckpt_interval_s=600))
+    print(C.sbatch(cluster, name="prod-train", nodes=args.hosts ** 2 // 2,
+                   gres="tpu:4", time="02:00:00", run_time_s=1800,
+                   user="alice", qos="high"))
+    print(C.squeue(cluster))
+
+    print("\n== sprio ==")
+    print(C.sprio(cluster))
+
+    cluster.run()
+    print(f"\n== drained; {cluster.preemptions_total} preemption(s) ==")
+    print("\n== sshare ==")
+    print(C.sshare(cluster))
     return 0
 
 

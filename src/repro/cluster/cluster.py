@@ -10,6 +10,15 @@ Mesh bridge.
 HA (paper §4 step 3 note on ``slurm_enable_ha``): the full controller state
 serializes to a dict (``snapshot()``) and a standby controller restores from
 it (``Cluster.restore``) — the failover test proves no job state is lost.
+The fair-share ledger rides along, so a failover keeps every tenant's decayed
+usage (no free reset for the hog).
+
+Multi-tenancy: every job belongs to an (account, QOS) pair.  Queue order
+comes from the multifactor fair-share engine (``fairshare.py``); finished
+and preempted segments charge TRES-seconds to the account tree; a high-QOS
+job that cannot start may preempt scavenger/normal victims, which requeue
+(keeping checkpointed progress via ``repro.checkpoint.store``) or are
+cancelled, per the victim QOS's ``preempt_mode``.
 """
 from __future__ import annotations
 
@@ -17,16 +26,25 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro.cluster.fairshare import (
+    FairShareTree, MultifactorPriority, PriorityWeights,
+)
 from repro.cluster.job import (
     Dependency, DependencyKind, Job, JobState, ResourceRequest,
 )
 from repro.cluster.node import Node, NodeState, Partition
+from repro.cluster.qos import (
+    PREEMPT_CANCEL, QOS, default_qos_table,
+)
 from repro.cluster.scheduler import Decision, schedule_pass
+
+#: bound on preempt -> requeue -> rerun cycles inside one schedule() call
+_MAX_PREEMPT_ROUNDS = 8
 
 
 @dataclass
 class AccountingRecord:
-    """One sacct row."""
+    """One sacct row (a preempted job contributes one row per segment)."""
     job_id: int
     name: str
     user: str
@@ -38,13 +56,19 @@ class AccountingRecord:
     nodes: tuple[str, ...]
     elapsed: float
     exit_code: Optional[int]
+    account: str = "root"
+    qos: str = "normal"
+    tres_charged: float = 0.0          # weighted TRES-seconds billed
 
 
 class Cluster:
     """Software-defined SLURM cluster (controller + inventory)."""
 
     def __init__(self, nodes: list[Node], partitions: list[Partition],
-                 sched_mode: str = "easy", real_mode: bool = False):
+                 sched_mode: str = "easy", real_mode: bool = False,
+                 fairshare: Optional[FairShareTree] = None,
+                 qos_table: Optional[dict[str, QOS]] = None,
+                 priority_weights: Optional[PriorityWeights] = None):
         self.nodes: dict[str, Node] = {n.name: n for n in nodes}
         self.partitions: dict[str, Partition] = {p.name: p for p in partitions}
         for p in partitions:
@@ -54,9 +78,20 @@ class Cluster:
         self.real_mode = real_mode
         self.clock: float = 0.0
         self.jobs: dict[int, Job] = {}
+        # live view of non-terminal jobs, so scheduling passes stay O(active)
+        # instead of rescanning the whole (append-only) job table — the
+        # difference between O(n) and O(n^2) over a long simulation
+        self._active: dict[int, Job] = {}
         self.accounting: list[AccountingRecord] = []
         self._next_id = itertools.count(1)
         self.metrics = None            # optional monitoring registry hook
+        self.fairshare = fairshare or FairShareTree()
+        self.qos_table = dict(qos_table) if qos_table is not None \
+            else default_qos_table()
+        self.priority_engine = MultifactorPriority(
+            self.fairshare, self.qos_table,
+            priority_weights or PriorityWeights())
+        self.preemptions_total = 0
 
     # ------------------------------------------------------------ submit ----
     def default_partition(self) -> str:
@@ -69,15 +104,28 @@ class Cluster:
                partition: Optional[str] = None, priority: int = 0,
                run_time_s: float = 60.0, script: Optional[Callable] = None,
                dependency: str = "", array: int = 0,
-               comment: str = "") -> list[int]:
+               comment: str = "", account: Optional[str] = None,
+               qos: str = "normal", ckpt_interval_s: Optional[float] = None,
+               checkpoint_dir: Optional[str] = None) -> list[int]:
         """sbatch.  Returns job id(s) (``array > 0`` submits an array)."""
         partition = partition or self.default_partition()
         if partition not in self.partitions:
             raise ValueError(f"invalid partition {partition!r}")
+        if qos not in self.qos_table:
+            raise ValueError(f"invalid qos {qos!r} "
+                             f"(have {sorted(self.qos_table)})")
+        q = self.qos_table[qos]
+        if q.max_wall_s is not None and req.time_limit_s > q.max_wall_s:
+            raise ValueError(f"time limit {req.time_limit_s}s exceeds QOS "
+                             f"{qos} MaxWall {q.max_wall_s}s")
         if req.time_limit_s > self.partitions[partition].max_time_s:
             raise ValueError(
                 f"time limit {req.time_limit_s}s exceeds partition max "
                 f"{self.partitions[partition].max_time_s}s")
+        if account is None:
+            account = self.fairshare.account_of(user)
+        elif account not in self.fairshare.accounts:
+            self.fairshare.add_account(account)   # lenient auto-association
         deps = tuple(Dependency.parse(dependency)) if dependency else ()
         for d in deps:
             if d.job_id not in self.jobs:
@@ -90,9 +138,13 @@ class Cluster:
                 job_id=jid, name=name, user=user, partition=partition,
                 req=req, priority=priority, submit_time=self.clock,
                 run_time_s=run_time_s, script=script, dependencies=deps,
-                array_index=i if array else None, comment=comment)
-            self._refresh_dependency(job)
+                array_index=i if array else None, comment=comment,
+                account=account, qos=qos, ckpt_interval_s=ckpt_interval_s,
+                checkpoint_dir=checkpoint_dir)
             self.jobs[jid] = job
+            if not job.state.finished:
+                self._active[jid] = job
+            self._refresh_dependency(job)
             ids.append(jid)
         self.schedule()
         return ids
@@ -107,6 +159,7 @@ class Cluster:
         else:
             job.state = JobState.CANCELLED
             job.end_time = self.clock
+            self._retire(job)
             self._account(job)
         self.schedule()
 
@@ -137,11 +190,17 @@ class Cluster:
         self.schedule()
 
     # --------------------------------------------------------- scheduling ----
+    def _retire(self, job: Job):
+        """Drop a job that reached a terminal state from the active view."""
+        self._active.pop(job.job_id, None)
+
     def _pending(self) -> list[Job]:
-        return [j for j in self.jobs.values() if j.state == JobState.PENDING]
+        return [j for j in self._active.values()
+                if j.state == JobState.PENDING]
 
     def _running(self) -> list[Job]:
-        return [j for j in self.jobs.values() if j.state == JobState.RUNNING]
+        return [j for j in self._active.values()
+                if j.state == JobState.RUNNING]
 
     def _refresh_dependency(self, job: Job):
         """Update the Dependency gate / fail jobs with impossible deps."""
@@ -155,6 +214,7 @@ class Cluster:
                     job.state = JobState.CANCELLED   # DependencyNeverSatisfied
                     job.end_time = self.clock
                     job.reason = "DependencyNeverSatisfied"
+                    self._retire(job)
                     self._account(job)
                     return
                 blocked |= not dep.state.ok
@@ -163,6 +223,7 @@ class Cluster:
                     job.state = JobState.CANCELLED
                     job.end_time = self.clock
                     job.reason = "DependencyNeverSatisfied"
+                    self._retire(job)
                     self._account(job)
                     return
                 blocked |= not dep.state.finished
@@ -175,19 +236,52 @@ class Cluster:
     def schedule(self) -> Decision:
         for job in self._pending():
             self._refresh_dependency(job)
-        decision = schedule_pass(
-            self.clock, self._pending(), self._running(), self.nodes,
-            self.partitions, self.sched_mode)
-        for job_id, alloc in decision.starts:
-            self._start(self.jobs[job_id], alloc)
-        for res in decision.reservations:
-            job = self.jobs.get(res.job_id)
-            if job and job.state == JobState.PENDING:
-                job.reason = "Resources"
-        if self.metrics is not None:
-            self.metrics.gauge("slurm_jobs_pending").set(len(self._pending()))
-            self.metrics.gauge("slurm_jobs_running").set(len(self._running()))
+        self.fairshare.decay_to(self.clock)
+        decision = None
+        for _ in range(_MAX_PREEMPT_ROUNDS):
+            priority_fn = self.priority_engine.priority_fn(
+                self.clock, self.partitions, len(self.nodes))
+            decision = schedule_pass(
+                self.clock, self._pending(), self._running(), self.nodes,
+                self.partitions, self.sched_mode, priority_fn=priority_fn,
+                qos_table=self.qos_table)
+            for job_id, alloc in decision.starts:
+                self._start(self.jobs[job_id], alloc)
+            for job_id, reason in decision.holds:
+                job = self.jobs.get(job_id)
+                if job and job.state == JobState.PENDING:
+                    job.reason = reason
+            for res in decision.reservations:
+                job = self.jobs.get(res.job_id)
+                if job and job.state == JobState.PENDING:
+                    job.reason = "Resources"
+            if not decision.preemptions:
+                break
+            for pre in decision.preemptions:
+                for vid in pre.victims:
+                    victim = self.jobs[vid]
+                    if victim.state == JobState.RUNNING:
+                        self._preempt(victim, by_job_id=pre.job_id)
+        self._export_metrics()
         return decision
+
+    def _export_metrics(self):
+        if self.metrics is None:
+            return
+        from repro.monitoring.metrics import (
+            METRIC_ACCOUNT_FAIRSHARE, METRIC_ACCOUNT_USAGE,
+            METRIC_JOBS_PENDING, METRIC_JOBS_RUNNING, METRIC_PREEMPTIONS,
+        )
+        self.metrics.gauge(METRIC_JOBS_PENDING).set(len(self._pending()))
+        self.metrics.gauge(METRIC_JOBS_RUNNING).set(len(self._running()))
+        self.metrics.gauge(METRIC_PREEMPTIONS).set(self.preemptions_total)
+        usage = self.metrics.gauge(
+            METRIC_ACCOUNT_USAGE, "decayed weighted TRES-seconds per account")
+        factor = self.metrics.gauge(
+            METRIC_ACCOUNT_FAIRSHARE, "fair-share factor 2^(-usage/shares)")
+        for name in self.fairshare.accounts:
+            usage.set(self.fairshare.usage.get(name, 0.0), account=name)
+            factor.set(self.fairshare.fair_share_factor(name), account=name)
 
     def _start(self, job: Job, alloc: tuple[str, ...]):
         for nm in alloc:
@@ -218,16 +312,72 @@ class Cluster:
         job.end_time = self.clock
         if job.exit_code is None:
             job.exit_code = 0 if state == JobState.COMPLETED else 1
+        self._retire(job)
         self._account(job)
 
+    def _preempt(self, job: Job, by_job_id: int):
+        """Evict a running job for a higher-QOS one: account the finished
+        segment, charge its usage, then requeue (or cancel, per the victim
+        QOS's preempt_mode)."""
+        assert job.state == JobState.RUNNING
+        elapsed = self.clock - job.start_time
+        mode = self.qos_table[job.qos].preempt_mode if job.qos in \
+            self.qos_table else "requeue"
+        self._release_nodes(job)
+        job.end_time = self.clock
+        self.preemptions_total += 1
+        if self.metrics is not None:
+            from repro.monitoring.metrics import METRIC_PREEMPTIONS_BY
+            self.metrics.counter(
+                METRIC_PREEMPTIONS_BY, "preempted segments").inc(
+                qos=job.qos, account=job.account)
+        if mode == PREEMPT_CANCEL:
+            job.state = JobState.CANCELLED
+            job.reason = f"PreemptedBy={by_job_id}"
+            if job.exit_code is None:
+                job.exit_code = 1
+            self._retire(job)
+            self._account(job)
+            return
+        # requeue path: one accounting row for the evicted segment
+        job.state = JobState.PREEMPTED
+        job.reason = f"PreemptedBy={by_job_id}"
+        self._account(job)
+        job.record_preemption(elapsed)
+        self._restore_progress(job)
+        job.state = JobState.PENDING
+        job.reason = "Requeued"
+        job.start_time = None
+        job.end_time = None
+        job.nodes_alloc = ()
+
+    def _restore_progress(self, job: Job):
+        """Checkpoint-restore hook: a preempted job with a checkpoint dir
+        resumes from its last saved step (convention: the trainer saves
+        ``step = seconds of completed work``) instead of restarting."""
+        if job.checkpoint_dir is None:
+            return
+        from repro.checkpoint import store
+        step = store.latest_step(job.checkpoint_dir)
+        if step is not None:
+            job.progress_s = max(job.progress_s, float(step))
+
     def _account(self, job: Job):
+        elapsed = ((job.end_time - job.start_time)
+                   if job.start_time is not None and job.end_time is not None
+                   else 0.0)
+        charged = 0.0
+        if elapsed > 0:
+            usage_factor = (self.qos_table[job.qos].usage_factor
+                            if job.qos in self.qos_table else 1.0)
+            charged = self.fairshare.charge(
+                job.account, job.req, elapsed, self.clock,
+                usage_factor=usage_factor)
         self.accounting.append(AccountingRecord(
             job.job_id, job.name, job.user, job.partition, job.submit_time,
             job.start_time, job.end_time, job.state.name,
-            job.nodes_alloc,
-            (job.end_time - job.start_time) if job.start_time is not None
-            and job.end_time is not None else 0.0,
-            job.exit_code))
+            job.nodes_alloc, elapsed, job.exit_code,
+            account=job.account, qos=job.qos, tres_charged=charged))
 
     # -------------------------------------------------------- event loop ----
     def next_event_time(self) -> Optional[float]:
@@ -271,6 +421,10 @@ class Cluster:
             "next_id": next(self._next_id),
             "sched_mode": self.sched_mode,
             "partitions": list(self.partitions.values()),
+            "fairshare": self.fairshare.snapshot(),
+            "qos_table": dict(self.qos_table),     # QOS objects are frozen
+            "priority_weights": self.priority_engine.weights,
+            "preemptions_total": self.preemptions_total,
         }
 
     @classmethod
@@ -282,7 +436,16 @@ class Cluster:
         c.real_mode = False
         c.clock = snap["clock"]
         c.jobs = snap["jobs"]
+        c._active = {jid: j for jid, j in c.jobs.items()
+                     if not j.state.finished}
         c.accounting = snap["accounting"]
         c._next_id = itertools.count(snap["next_id"])
         c.metrics = None
+        c.fairshare = FairShareTree.restore(
+            snap.get("fairshare", FairShareTree().snapshot()))
+        c.qos_table = dict(snap.get("qos_table") or default_qos_table())
+        c.priority_engine = MultifactorPriority(
+            c.fairshare, c.qos_table,
+            snap.get("priority_weights") or PriorityWeights())
+        c.preemptions_total = snap.get("preemptions_total", 0)
         return c

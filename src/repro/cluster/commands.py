@@ -1,6 +1,7 @@
 """The SLURM user-command surface from paper §5.2.1: sinfo, squeue, sbatch,
-srun, salloc, scancel, scontrol, sacct — each returns the formatted text a
-user would see, against a :class:`Cluster`.
+srun, salloc, scancel, scontrol, sacct — plus the multi-tenant accounting
+surface (sacctmgr, sshare, sprio) — each returns the formatted text a user
+would see, against a :class:`Cluster`.
 """
 from __future__ import annotations
 
@@ -9,6 +10,7 @@ from typing import Optional
 from repro.cluster.cluster import Cluster
 from repro.cluster.job import Job, JobState, ResourceRequest
 from repro.cluster.node import NodeState
+from repro.cluster.qos import format_tres
 
 
 def _fmt_time(seconds: Optional[float]) -> str:
@@ -69,6 +71,7 @@ def squeue(cluster: Cluster, user: Optional[str] = None,
            partition: Optional[str] = None) -> str:
     """`squeue [-u user] [-t states] [-p partition]`."""
     rows = [f"{'JOBID':<8}{'PARTITION':<12}{'NAME':<20}{'USER':<10}"
+            f"{'ACCOUNT':<10}{'QOS':<11}"
             f"{'ST':<4}{'TIME':<12}{'NODES':<7}NODELIST(REASON)"]
     for job in sorted(cluster.jobs.values(), key=Job.sort_key):
         if job.state.finished:
@@ -86,7 +89,8 @@ def squeue(cluster: Cluster, user: Optional[str] = None,
         nm = job.name if job.array_index is None else \
             f"{job.name}[{job.array_index}]"
         rows.append(f"{job.job_id:<8}{job.partition:<12}{nm[:19]:<20}"
-                    f"{job.user:<10}{job.state.value:<4}"
+                    f"{job.user:<10}{job.account[:9]:<10}{job.qos[:10]:<11}"
+                    f"{job.state.value:<4}"
                     f"{_fmt_time(elapsed):<12}{job.req.nodes:<7}{where}")
     return "\n".join(rows)
 
@@ -95,8 +99,12 @@ def sbatch(cluster: Cluster, name: str = "job", nodes: int = 1,
            gres: str = "", cpus_per_task: int = 1, mem: str = "1G",
            time: str = "01:00:00", partition: Optional[str] = None,
            dependency: str = "", array: int = 0, priority: int = 0,
-           run_time_s: float = 60.0, script=None, user: str = "ubuntu") -> str:
-    """`sbatch` with the guide's §5.2.4 options.  Returns the SLURM message."""
+           run_time_s: float = 60.0, script=None, user: str = "ubuntu",
+           account: Optional[str] = None, qos: str = "normal",
+           ckpt_interval_s: Optional[float] = None,
+           checkpoint_dir: Optional[str] = None) -> str:
+    """`sbatch` with the guide's §5.2.4 options (plus ``--account``/``--qos``).
+    Returns the SLURM message."""
     req = ResourceRequest(
         nodes=nodes,
         gres_per_node=_parse_gres(gres),
@@ -106,7 +114,10 @@ def sbatch(cluster: Cluster, name: str = "job", nodes: int = 1,
     )
     ids = cluster.submit(name, req, user=user, partition=partition,
                          priority=priority, run_time_s=run_time_s,
-                         script=script, dependency=dependency, array=array)
+                         script=script, dependency=dependency, array=array,
+                         account=account, qos=qos,
+                         ckpt_interval_s=ckpt_interval_s,
+                         checkpoint_dir=checkpoint_dir)
     if array:
         return f"Submitted batch job {ids[0]} (array {len(ids)} tasks)"
     return f"Submitted batch job {ids[0]}"
@@ -142,6 +153,7 @@ def scancel(cluster: Cluster, job_id: int) -> str:
 def scontrol_show_job(cluster: Cluster, job_id: int) -> str:
     j = cluster.jobs[job_id]
     return (f"JobId={j.job_id} JobName={j.name} UserId={j.user} "
+            f"Account={j.account} QOS={j.qos} Restarts={j.requeue_count} "
             f"Priority={j.priority} Partition={j.partition} "
             f"JobState={j.state.name} Reason={j.reason or 'None'} "
             f"NumNodes={j.req.nodes} "
@@ -173,15 +185,103 @@ def scontrol_update_node(cluster: Cluster, nodename: str, state: str,
     return f"scontrol: node {nodename} -> {state}"
 
 
-def sacct(cluster: Cluster, user: Optional[str] = None) -> str:
-    rows = [f"{'JobID':<8}{'JobName':<20}{'Partition':<12}{'State':<12}"
+def sacct(cluster: Cluster, user: Optional[str] = None,
+          account: Optional[str] = None) -> str:
+    """``sacct [-u user] [-A account]`` — one row per job *segment* (a
+    preempted-then-requeued job shows a PREEMPTED row and a final row)."""
+    rows = [f"{'JobID':<8}{'JobName':<20}{'Partition':<12}{'Account':<10}"
+            f"{'QOS':<11}{'State':<12}"
             f"{'Elapsed':<12}{'NNodes':<8}{'ExitCode':<8}"]
     for r in cluster.accounting:
         if user and r.user != user:
             continue
+        if account and r.account != account:
+            continue
         rows.append(f"{r.job_id:<8}{r.name[:19]:<20}{r.partition:<12}"
+                    f"{r.account[:9]:<10}{r.qos[:10]:<11}"
                     f"{r.state:<12}{_fmt_time(r.elapsed):<12}"
-                    f"{len(r.nodes):<8}{r.exit_code}:0")
+                    f"{len(r.nodes):<8}{r.exit_code or 0}:0")
+    return "\n".join(rows)
+
+
+# ----------------------------------------------- multi-tenant accounting ----
+
+def sacctmgr_add_account(cluster: Cluster, name: str, parent: str = "root",
+                         fairshare: int = 1, description: str = "") -> str:
+    """``sacctmgr add account <name> parent=<p> fairshare=<n>``."""
+    cluster.fairshare.add_account(name, parent=parent, shares=fairshare,
+                                  description=description)
+    return f" Adding Account(s)\n  {name}\n Settings\n  Fairshare={fairshare}"
+
+
+def sacctmgr_add_user(cluster: Cluster, user: str, account: str) -> str:
+    """``sacctmgr add user <u> account=<a>``."""
+    cluster.fairshare.add_user(user, account)
+    return f" Adding User(s)\n  {user}\n Settings\n  Account={account}"
+
+
+def sacctmgr_show_assoc(cluster: Cluster) -> str:
+    """``sacctmgr show assoc format=Account,ParentName,User,Fairshare``."""
+    t = cluster.fairshare
+    rows = [f"{'Account':<12}{'Par Name':<12}{'User':<10}{'Share':>6}"]
+    for name in sorted(t.accounts):
+        a = t.accounts[name]
+        rows.append(f"{a.name:<12}{a.parent or '':<12}{'':<10}"
+                    f"{a.shares:>6}")
+        for u in sorted(u for u, acct in t.user_account.items()
+                        if acct == name):
+            rows.append(f"{a.name:<12}{'':<12}{u:<10}{1:>6}")
+    return "\n".join(rows)
+
+
+def sacctmgr_show_qos(cluster: Cluster) -> str:
+    """``sacctmgr show qos format=Name,Priority,Preempt,PreemptMode,GrpTRES``."""
+    rows = [f"{'Name':<12}{'Priority':>9} {'Preempt':<18}{'PreemptMode':<13}"
+            "GrpTRES"]
+    for name in sorted(cluster.qos_table):
+        q = cluster.qos_table[name]
+        rows.append(f"{q.name:<12}{q.priority:>9} "
+                    f"{','.join(q.preempt) or '':<18}"
+                    f"{q.preempt_mode:<13}{format_tres(q.grp_tres)}")
+    return "\n".join(rows)
+
+
+def sshare(cluster: Cluster) -> str:
+    """``sshare -l``: the fair-share tree with live usage and factors."""
+    t = cluster.fairshare
+    t.decay_to(cluster.clock)
+    rows = [f"{'Account':<14}{'RawShares':>10}{'NormShares':>11}"
+            f"{'RawUsage':>12}{'NormUsage':>10}{'FairShare':>10}"]
+
+    def walk(name: str, depth: int):
+        a = t.accounts[name]
+        label = (" " * depth) + a.name
+        rows.append(f"{label:<14}{a.shares:>10}{t.norm_shares(name):>11.4f}"
+                    f"{t.usage.get(name, 0.0):>12.0f}"
+                    f"{t.norm_usage(name):>10.4f}"
+                    f"{t.fair_share_factor(name):>10.4f}")
+        for child in sorted(t.children(name), key=lambda c: c.name):
+            walk(child.name, depth + 1)
+
+    walk("root", 0)
+    return "\n".join(rows)
+
+
+def sprio(cluster: Cluster) -> str:
+    """``sprio -l``: multifactor priority breakdown for pending jobs."""
+    rows = [f"{'JOBID':<8}{'USER':<10}{'ACCOUNT':<10}{'PRIORITY':>9}"
+            f"{'AGE':>7}{'FAIRSHARE':>10}{'JOBSIZE':>8}{'PARTITION':>10}"
+            f"{'QOS':>7}{'NICE':>6}"]
+    engine = cluster.priority_engine
+    pending = [j for j in cluster.jobs.values()
+               if j.state == JobState.PENDING]
+    for job in sorted(pending, key=lambda j: j.job_id):
+        b = engine.breakdown(job, cluster.clock, cluster.partitions,
+                             len(cluster.nodes))
+        rows.append(f"{job.job_id:<8}{job.user:<10}{job.account[:9]:<10}"
+                    f"{b.total:>9.0f}{b.age:>7.0f}{b.fairshare:>10.0f}"
+                    f"{b.job_size:>8.0f}{b.partition:>10.0f}"
+                    f"{b.qos:>7.0f}{b.nice:>6.0f}")
     return "\n".join(rows)
 
 

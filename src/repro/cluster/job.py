@@ -19,6 +19,7 @@ class JobState(enum.Enum):
     FAILED = "F"
     CANCELLED = "CA"
     TIMEOUT = "TO"
+    PREEMPTED = "PR"         # transient: evicted, about to requeue
 
     @property
     def finished(self) -> bool:
@@ -85,6 +86,16 @@ class Job:
     array_index: Optional[int] = None     # set for array members
     comment: str = ""
 
+    # multi-tenancy (sacctmgr association + QOS)
+    account: str = "root"
+    qos: str = "normal"
+
+    # preemption / requeue
+    requeue_count: int = 0                # times evicted back to PENDING
+    progress_s: float = 0.0               # checkpointed work retained
+    ckpt_interval_s: Optional[float] = None   # sim: progress granularity
+    checkpoint_dir: Optional[str] = None  # real mode: repro.checkpoint.store
+
     # lifecycle
     state: JobState = JobState.PENDING
     reason: str = "Priority"
@@ -98,12 +109,26 @@ class Job:
     def time_limit_s(self) -> int:
         return self.req.time_limit_s
 
+    def remaining_s(self) -> float:
+        """Work left after checkpointed progress (full run if never saved)."""
+        return max(self.run_time_s - self.progress_s, 0.0)
+
     def runtime(self) -> float:
-        """Actual runtime (capped by limit — TIMEOUT if it would exceed)."""
-        return min(self.run_time_s, self.req.time_limit_s)
+        """Actual runtime of the *current segment* (capped by the limit —
+        TIMEOUT if it would exceed; the limit resets per requeue segment,
+        matching SLURM's requeue semantics)."""
+        return min(self.remaining_s(), self.req.time_limit_s)
 
     def will_timeout(self) -> bool:
-        return self.run_time_s > self.req.time_limit_s
+        return self.remaining_s() > self.req.time_limit_s
+
+    def record_preemption(self, elapsed_s: float):
+        """Evicted after ``elapsed_s`` of this segment: keep checkpointed
+        progress (last full ``ckpt_interval_s`` multiple; none → restart)."""
+        if self.ckpt_interval_s:
+            kept = (elapsed_s // self.ckpt_interval_s) * self.ckpt_interval_s
+            self.progress_s += kept
+        self.requeue_count += 1
 
     def sort_key(self) -> tuple:
         """Queue order: higher priority first, then FIFO by submit time."""

@@ -1,9 +1,12 @@
-"""The SLURM scheduling policy: priority queue + EASY/conservative backfill.
+"""The SLURM scheduling policy: priority queue + EASY/conservative backfill
++ QOS preemption.
 
 This is the paper's §3.2.3 artifact ("Slurm: scalability, fairness policies")
 implemented as a deterministic, property-testable engine:
 
-* **Priority order** — pending jobs sorted by (priority desc, submit FIFO).
+* **Priority order** — pending jobs sorted by a pluggable ``priority_fn``
+  (the multifactor fair-share engine in ``fairshare.py``) falling back to
+  the static (priority desc, submit FIFO) order.
 * **Backfill** — when the head job can't start, it gets a *reservation* at
   the earliest projected time it fits (from running jobs' expected ends).
   Lower-priority jobs may start out of order only if they cannot delay a
@@ -11,6 +14,13 @@ implemented as a deterministic, property-testable engine:
   ``mode="easy"`` reserves for the first blocked job only (SLURM's default
   sched/backfill behaviour); ``mode="conservative"`` reserves for every
   blocked job.
+* **QOS limits** — a job whose account already holds its QOS's ``GrpTRES``
+  cap is held with reason ``QOSGrpResourceLimit``.
+* **Preemption** — when a blocked job's QOS lists preemptable tiers, the
+  pass selects the cheapest set of lowest-priority running victims whose
+  eviction makes room, and emits them in ``Decision.preemptions``.  The
+  engine in ``cluster.py`` requeues (or cancels) the victims and re-runs
+  the pass so the preemptor starts on the freed nodes.
 * **TPU contiguity** — allocations must tile a rectangle of hosts in the
   pod's host grid (GPUs don't have this constraint; TPU ICI does).
 
@@ -19,12 +29,14 @@ Pure policy: given cluster state, produce decisions.  The event engine in
 """
 from __future__ import annotations
 
+import copy
 import itertools
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.cluster.job import Job, JobState
 from repro.cluster.node import Node, NodeState, Partition
+from repro.cluster.qos import QOS, add_tres, job_tres, tres_within
 
 
 @dataclass(frozen=True)
@@ -35,10 +47,19 @@ class Reservation:
 
 
 @dataclass(frozen=True)
+class Preemption:
+    """Evict ``victims`` so ``job_id`` can start."""
+    job_id: int
+    victims: tuple[int, ...]
+
+
+@dataclass(frozen=True)
 class Decision:
     """One scheduling pass outcome."""
     starts: tuple[tuple[int, tuple[str, ...]], ...]  # (job_id, nodes)
     reservations: tuple[Reservation, ...]
+    preemptions: tuple[Preemption, ...] = ()
+    holds: tuple[tuple[int, str], ...] = ()          # (job_id, reason)
 
 
 def _rect_candidates(nodes: list[Node], count: int):
@@ -89,9 +110,8 @@ def _projected_allocation(job: Job, nodes: dict[str, Node],
                           partition: Partition, running: list[Job],
                           now: float) -> Optional[Reservation]:
     """Earliest-start reservation from projected job-end releases."""
-    # replay releases in end-time order on a copy of the free state
-    import copy
-    shadow = {nm: copy.deepcopy(nodes[nm]) for nm in partition.nodes}
+    # replay releases in end-time order on a clone of the free state
+    shadow = {nm: nodes[nm].clone() for nm in partition.nodes}
     events = sorted(
         ((j.start_time + j.runtime(), j.job_id, j) for j in running
          if j.start_time is not None),
@@ -113,25 +133,92 @@ def _projected_allocation(job: Job, nodes: dict[str, Node],
     return None
 
 
+def _preemption_victims(job: Job, work: dict[str, Node],
+                        partition: Partition, running: list[Job],
+                        qos_table: dict[str, QOS],
+                        rank: Callable[[Job], tuple],
+                        ) -> Optional[tuple[int, ...]]:
+    """Lowest-priority running jobs whose eviction lets ``job`` start.
+
+    Greedy: evict candidates cheapest-first on a shadow state until the
+    allocation fits, then drop any victim whose nodes turned out not to be
+    needed.  Returns None when no victim set makes room.
+    """
+    my_qos = qos_table.get(job.qos)
+    if my_qos is None or not my_qos.preempt:
+        return None
+    part_nodes = set(partition.nodes)
+    candidates = [r for r in running
+                  if my_qos.can_preempt(r.qos)
+                  and any(nm in part_nodes for nm in r.nodes_alloc)]
+    if not candidates:
+        return None
+    candidates.sort(key=rank, reverse=True)       # worst-ranked first
+    shadow = {nm: work[nm].clone() for nm in partition.nodes}
+    evicted: list[Job] = []
+    for victim in candidates:
+        for nm in victim.nodes_alloc:
+            if nm in shadow:
+                shadow[nm].release(
+                    victim.job_id, victim.req.cpus_per_node,
+                    victim.req.mem_mb_per_node, victim.req.gres_per_node)
+        evicted.append(victim)
+        alloc = find_allocation(job, shadow, partition)
+        if alloc is not None:
+            needed = set(alloc)
+            kept = tuple(v.job_id for v in evicted
+                         if needed & set(v.nodes_alloc))
+            return kept or tuple(v.job_id for v in evicted[-1:])
+    return None
+
+
+def _grp_tres_usage(running: list[Job]) -> dict[tuple[str, str], dict]:
+    """(qos, account) -> aggregate TRES held by running jobs."""
+    usage: dict[tuple[str, str], dict] = {}
+    for j in running:
+        add_tres(usage.setdefault((j.qos, j.account), {}), job_tres(j.req))
+    return usage
+
+
 def schedule_pass(now: float, pending: list[Job], running: list[Job],
                   nodes: dict[str, Node], partitions: dict[str, Partition],
-                  mode: str = "easy") -> Decision:
+                  mode: str = "easy",
+                  priority_fn: Optional[Callable[[Job], float]] = None,
+                  qos_table: Optional[dict[str, QOS]] = None,
+                  preemption_enabled: bool = True) -> Decision:
     """One scheduling cycle.  Mutates nothing; returns the decision."""
     assert mode in ("easy", "conservative", "fifo")
+    qos_table = qos_table or {}
+
+    def rank(j: Job) -> tuple:
+        """Ascending sort => best job first."""
+        tier = partitions[j.partition].priority_tier if j.partition in \
+            partitions else 0
+        if priority_fn is not None:
+            return (-tier, -priority_fn(j), j.submit_time, j.job_id)
+        return (-tier,) + j.sort_key()
+
     queue = sorted((j for j in pending if j.state == JobState.PENDING
-                    and j.reason != "Dependency"), key=Job.sort_key)
-    # partition priority tier outranks job priority (SLURM PriorityTier)
-    queue.sort(key=lambda j: -partitions[j.partition].priority_tier)
+                    and j.reason != "Dependency"), key=rank)
 
     starts: list[tuple[int, tuple[str, ...]]] = []
     reservations: list[Reservation] = []
+    preemptions: list[Preemption] = []
+    holds: list[tuple[int, str]] = []
     # working copy of node state so successive starts see earlier ones
-    import copy
-    work = {nm: copy.deepcopy(n) for nm, n in nodes.items()}
+    work = {nm: n.clone() for nm, n in nodes.items()}
     run_proj = list(running)
+    grp_usage = _grp_tres_usage(running)
 
     for job in queue:
         part = partitions[job.partition]
+        qos = qos_table.get(job.qos)
+        my_tres = job_tres(job.req)
+        if qos is not None and qos.grp_tres:
+            held = grp_usage.get((job.qos, job.account), {})
+            if not tres_within(held, my_tres, qos.grp_tres):
+                holds.append((job.job_id, "QOSGrpResourceLimit"))
+                continue                 # held: never backfills or preempts
         alloc = find_allocation(job, work, part)
         if alloc is not None:
             # backfill guard: starting now must not delay any reservation
@@ -145,12 +232,21 @@ def schedule_pass(now: float, pending: list[Job], running: list[Job],
                     work[nm].allocate(job.job_id, job.req.cpus_per_node,
                                       job.req.mem_mb_per_node,
                                       job.req.gres_per_node)
+                add_tres(grp_usage.setdefault((job.qos, job.account), {}),
+                         my_tres)
                 # projected running job for later reservations
                 proj = copy.copy(job)
                 proj.start_time = now
                 proj.nodes_alloc = alloc
                 run_proj.append(proj)
                 continue
+        if (preemption_enabled and not preemptions
+                and qos is not None and qos.preempt):
+            victims = _preemption_victims(job, work, part, running,
+                                          qos_table, rank)
+            if victims:
+                preemptions.append(Preemption(job.job_id, victims))
+                continue            # engine applies eviction + new pass
         if mode == "fifo":
             break                       # strict FIFO: head blocks the queue
         if mode == "easy" and reservations:
@@ -159,4 +255,5 @@ def schedule_pass(now: float, pending: list[Job], running: list[Job],
         if res is not None:
             reservations.append(res)
 
-    return Decision(tuple(starts), tuple(reservations))
+    return Decision(tuple(starts), tuple(reservations), tuple(preemptions),
+                    tuple(holds))

@@ -18,10 +18,19 @@ from __future__ import annotations
 
 import functools
 
+import inspect
+
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:                                    # jax >= 0.5 exports it at top level
+    from jax import shard_map
+except ImportError:                     # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# the replication-check kwarg was renamed check_rep -> check_vma
+_CHECK_KW = ("check_vma" if "check_vma" in
+             inspect.signature(shard_map).parameters else "check_rep")
 
 
 def split_stages(stacked, n_stages: int):
@@ -53,7 +62,7 @@ def pipeline_apply(stage_fn, stacked_params, x_micro, mesh: Mesh,
         shard_map, mesh=mesh,
         in_specs=(p_params, P()),
         out_specs=P(),
-        check_vma=False)
+        **{_CHECK_KW: False})
     def run(params_local, x_local):
         my = jax.lax.axis_index(axis)
         is_first = my == 0

@@ -10,23 +10,31 @@ model=16); two pods join over DCN on a leading "pod" axis = (2, 16, 16).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+try:                                    # jax >= 0.5.0 only
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _axis_kw(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_mesh(data: int = 1, model: int = 1, pod: int = 1) -> Mesh:
     """Small/explicit mesh (tests, examples, single-host runs)."""
     if pod > 1:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+                             **_axis_kw(3))
+    return jax.make_mesh((data, model), ("data", "model"), **_axis_kw(2))
 
 
 def single_device_mesh() -> Mesh:

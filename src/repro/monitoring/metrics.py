@@ -19,6 +19,21 @@ _DEFAULT_BUCKETS = (
     0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 50.0, 100.0,
     float("inf"))
 
+# Canonical series names for the SLURM layer (what the paper's §6.1
+# Prometheus would scrape from slurmctld exporters).  The cluster engine
+# exports these; dashboards/tests key off the constants, not string
+# literals.
+METRIC_JOBS_PENDING = "slurm_jobs_pending"
+METRIC_JOBS_RUNNING = "slurm_jobs_running"
+#: total preempted segments since boot (gauge mirror of the counter below)
+METRIC_PREEMPTIONS = "slurm_preemptions_total"
+#: preempted segments labeled by victim {qos=,account=}
+METRIC_PREEMPTIONS_BY = "slurm_preempted_segments"
+#: decayed weighted TRES-seconds, labeled {account=}
+METRIC_ACCOUNT_USAGE = "slurm_account_tres_usage"
+#: the 2^(-usage/shares) fair-share factor, labeled {account=}
+METRIC_ACCOUNT_FAIRSHARE = "slurm_account_fairshare_factor"
+
 
 def _labels_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))

@@ -1,0 +1,85 @@
+"""Deterministic fallback for the `hypothesis` API surface this repo uses.
+
+The CI container does not ship hypothesis and the repo must not pip-install
+at test time, so when the real library is absent the property tests fall
+back to this mini-fuzzer: the same @given/@settings decorators, backed by a
+seeded PRNG that draws `max_examples` pseudo-random examples.  No shrinking,
+no database — just deterministic coverage of the same strategy space.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=1 << 31):
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(seq):
+    items = list(seq)
+    return Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def tuples(*strats):
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+def lists(strat, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [strat.example(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+def floats(min_value=0.0, max_value=1.0):
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._mini_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mini_max_examples", 25)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                vals = [s.example(rng) for s in strats]
+                fn(*args, *vals, **kwargs)
+        # hide the example parameters so pytest doesn't treat them as
+        # fixtures (real hypothesis does the same)
+        wrapper.__signature__ = inspect.Signature()
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+class _St:
+    integers = staticmethod(integers)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    tuples = staticmethod(tuples)
+    lists = staticmethod(lists)
+    floats = staticmethod(floats)
+
+
+strategies = _St()

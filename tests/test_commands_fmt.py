@@ -1,0 +1,159 @@
+"""commands.py output surfaces: squeue/sacct formatting round-trips (parse
+the rendered table back and compare to controller state), plus golden-output
+tests for the new sshare/sprio surfaces on a deterministic scenario."""
+import pytest
+
+from repro.cluster import (
+    Cluster, JobState, Node, Partition, ResourceRequest, commands,
+)
+
+
+def small_cluster(n_nodes=4) -> Cluster:
+    nodes = [Node(name=f"n{i:02d}", cpus=16, mem_mb=65536,
+                  gres={"tpu": 4}, coord=(0, i)) for i in range(n_nodes)]
+    parts = [Partition(name="gpu", nodes=tuple(n.name for n in nodes),
+                       default=True)]
+    return Cluster(nodes, parts)
+
+
+def req(nodes=1, time_s=36_000):
+    return ResourceRequest(nodes=nodes, gres_per_node={"tpu": 4},
+                           cpus_per_node=1, mem_mb_per_node=1024,
+                           time_limit_s=time_s)
+
+
+def two_tenant_cluster() -> Cluster:
+    """Deterministic scenario: one running, one pending, one preempted."""
+    c = small_cluster()
+    commands.sacctmgr_add_account(c, "prod", fairshare=10)
+    commands.sacctmgr_add_account(c, "research", fairshare=1)
+    commands.sacctmgr_add_user(c, "alice", "prod")
+    commands.sacctmgr_add_user(c, "bob", "research")
+    c.submit("sweep", req(nodes=4), user="bob", qos="scavenger",
+             run_time_s=2000, ckpt_interval_s=100)
+    c.clock = 500.0
+    c.submit("train", req(nodes=4), user="alice", qos="high",
+             run_time_s=1000)                   # preempts the sweep
+    c.submit("queued", req(nodes=2), user="bob", qos="normal",
+             run_time_s=300)
+    return c
+
+
+# ------------------------------------------------------------ round-trips ----
+
+# squeue columns: JOBID PARTITION NAME USER ACCOUNT QOS ST TIME NODES WHERE
+_SQUEUE_COLS = ((0, 8), (8, 20), (20, 40), (40, 50), (50, 60), (60, 71),
+                (71, 75), (75, 87), (87, 94), (94, None))
+
+
+def _cells(row, spans):
+    return [row[a:b].strip() if b else row[a:].strip() for a, b in spans]
+
+
+def test_squeue_round_trips_controller_state():
+    c = two_tenant_cluster()
+    lines = commands.squeue(c).splitlines()
+    assert _cells(lines[0], _SQUEUE_COLS)[:7] == [
+        "JOBID", "PARTITION", "NAME", "USER", "ACCOUNT", "QOS", "ST"]
+    live = {j.job_id: j for j in c.jobs.values() if not j.state.finished}
+    assert len(lines) - 1 == len(live)
+    for row in lines[1:]:
+        (jid, part, name, user, account, qos, st, t, nnodes,
+         where) = _cells(row, _SQUEUE_COLS)
+        job = live[int(jid)]
+        assert part == job.partition
+        assert name == job.name
+        assert user == job.user
+        assert account == job.account
+        assert qos == job.qos
+        assert st == job.state.value
+        assert int(nnodes) == job.req.nodes
+        if job.state == JobState.RUNNING:
+            assert where == ",".join(job.nodes_alloc)
+        else:
+            assert where == f"({job.reason})"
+
+
+# sacct columns: JobID JobName Partition Account QOS State Elapsed NNodes Exit
+_SACCT_COLS = ((0, 8), (8, 28), (28, 40), (40, 50), (50, 61), (61, 73),
+               (73, 85), (85, 93), (93, None))
+
+
+def _parse_elapsed(text):
+    days = 0
+    if "-" in text:
+        d, text = text.split("-")
+        days = int(d)
+    h, m, s = (int(p) for p in text.split(":"))
+    return days * 86_400 + h * 3_600 + m * 60 + s
+
+
+def test_sacct_round_trips_accounting_segments():
+    c = two_tenant_cluster()
+    c.run()
+    lines = commands.sacct(c).splitlines()
+    assert len(lines) - 1 == len(c.accounting)   # one row per segment
+    for row, rec in zip(lines[1:], c.accounting):
+        (jid, name, part, account, qos, state, elapsed, nnodes,
+         exit_) = _cells(row, _SACCT_COLS)
+        assert int(jid) == rec.job_id
+        assert name == rec.name
+        assert part == rec.partition
+        assert account == rec.account
+        assert qos == rec.qos
+        assert state == rec.state
+        assert _parse_elapsed(elapsed) == int(rec.elapsed)
+        assert int(nnodes) == len(rec.nodes)
+        assert exit_ == f"{rec.exit_code or 0}:0"
+
+
+def test_sacct_filters_by_user_and_account():
+    c = two_tenant_cluster()
+    c.run()
+    only_alice = commands.sacct(c, user="alice")
+    assert "train" in only_alice and "sweep" not in only_alice
+    only_research = commands.sacct(c, account="research")
+    assert "sweep" in only_research and "train" not in only_research
+
+
+# ---------------------------------------------------------------- goldens ----
+
+def test_sshare_golden():
+    """research burned 500s x 4 nodes x 4.05 weighted-TRES x 0.25 scavenger
+    discount = 2025; with NormShares 0.0909 its factor is 2^-11 ~ 0.0005."""
+    c = two_tenant_cluster()
+    assert commands.sshare(c) == "\n".join([
+        "Account        RawShares NormShares    RawUsage NormUsage FairShare",  # noqa: E501
+        "root                   1     1.0000        2025    1.0000    0.5000",
+        " prod                 10     0.9091           0    0.0000    1.0000",
+        " research              1     0.0909        2025    1.0000    0.0005",
+    ])
+
+
+def test_sprio_golden():
+    """Job 1 (requeued sweep): age 500s/7d*1000 ~ 1, fairshare 10000*0.0005,
+    size 4/4 nodes * 500, partition tier 1000, scavenger QOS 0.  Job 3:
+    normal QOS 500/1000 * 2000 = 1000, size 2/4 * 500 = 250."""
+    c = two_tenant_cluster()
+    assert commands.sprio(c) == "\n".join([
+        "JOBID   USER      ACCOUNT    PRIORITY    AGE FAIRSHARE JOBSIZE PARTITION    QOS  NICE",  # noqa: E501
+        "1       bob       research       1506      1         5     500      1000      0     0",  # noqa: E501
+        "3       bob       research       2255      0         5     250      1000   1000     0",  # noqa: E501
+    ])
+
+
+def test_sacctmgr_show_surfaces():
+    c = two_tenant_cluster()
+    assoc = commands.sacctmgr_show_assoc(c)
+    assert "prod" in assoc and "alice" in assoc
+    qos = commands.sacctmgr_show_qos(c)
+    assert "scavenger" in qos and "requeue" in qos
+    assert "normal,scavenger" in qos          # high's preempt list
+
+
+def test_scontrol_show_job_includes_tenancy():
+    c = two_tenant_cluster()
+    out = commands.scontrol_show_job(c, 1)
+    assert "Account=research" in out
+    assert "QOS=scavenger" in out
+    assert "Restarts=1" in out                # it was preempted once

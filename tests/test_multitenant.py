@@ -1,0 +1,376 @@
+"""Multi-tenant scheduling: account tree, fair-share factors, QOS limits,
+preemption + requeue (with checkpoint restore), and the convergence
+properties the subsystem exists for:
+
+* with equal shares and persistent demand from two accounts, accumulated
+  TRES usage stays within 10% of parity over a 10k-event simulation even
+  when one tenant's jobs are 3x longer;
+* a ``high`` QOS job preempts a ``scavenger`` job, which requeues and
+  completes, with both segments visible in ``sacct``;
+* starved accounts' priority rises as the dominant account's usage decays.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    Cluster, FairShareTree, JobState, Node, Partition, PriorityWeights, QOS,
+    ResourceRequest, commands, default_qos_table,
+)
+from repro.cluster.qos import PREEMPT_CANCEL, job_tres, tres_within
+
+
+def small_cluster(n_nodes=4, qos_table=None, fairshare=None) -> Cluster:
+    nodes = [Node(name=f"n{i:02d}", cpus=16, mem_mb=65536,
+                  gres={"tpu": 4}, coord=(0, i)) for i in range(n_nodes)]
+    parts = [Partition(name="gpu", nodes=tuple(n.name for n in nodes),
+                       default=True)]
+    return Cluster(nodes, parts, qos_table=qos_table, fairshare=fairshare)
+
+
+def req(nodes=1, tpu=4, time_s=36_000):
+    return ResourceRequest(nodes=nodes, gres_per_node={"tpu": tpu},
+                           cpus_per_node=1, mem_mb_per_node=1024,
+                           time_limit_s=time_s)
+
+
+# ------------------------------------------------------- fair-share tree ----
+
+def test_account_tree_norm_shares():
+    t = FairShareTree()
+    t.add_account("org", shares=1)
+    t.add_account("a", parent="org", shares=3)
+    t.add_account("b", parent="org", shares=1)
+    assert t.norm_shares("org") == 1.0            # only child of root
+    assert t.norm_shares("a") == pytest.approx(0.75)
+    assert t.norm_shares("b") == pytest.approx(0.25)
+
+
+def test_usage_charges_propagate_to_ancestors():
+    t = FairShareTree()
+    t.add_account("org")
+    t.add_account("team", parent="org")
+    charged = t.charge("team", req(nodes=2), elapsed_s=100.0, now=100.0)
+    assert charged > 0
+    assert t.usage["team"] == pytest.approx(charged)
+    assert t.usage["org"] == pytest.approx(charged)
+    assert t.usage["root"] == pytest.approx(charged)
+
+
+def test_usage_decay_half_life():
+    t = FairShareTree(half_life_s=100.0)
+    t.add_account("a")
+    t.charge("a", req(), elapsed_s=10.0, now=0.0)
+    before = t.usage["a"]
+    t.decay_to(100.0)                             # exactly one half-life
+    assert t.usage["a"] == pytest.approx(before / 2)
+    t.decay_to(300.0)                             # two more
+    assert t.usage["a"] == pytest.approx(before / 8)
+
+
+def test_fair_share_factor_classic_curve():
+    t = FairShareTree()
+    t.add_account("a", shares=1)
+    t.add_account("b", shares=1)
+    assert t.fair_share_factor("a") == 1.0        # no usage anywhere
+    # a consumes everything -> a's factor collapses, b's stays high
+    t.charge("a", req(nodes=4), elapsed_s=1000.0, now=0.0)
+    assert t.fair_share_factor("a") == pytest.approx(
+        2.0 ** (-1.0 / 0.5))                      # usage=1, shares=0.5
+    assert t.fair_share_factor("b") == 1.0        # zero usage
+
+
+def test_tres_weights_tpu_dominates():
+    t = FairShareTree()
+    r = ResourceRequest(nodes=1, gres_per_node={"tpu": 4}, cpus_per_node=8,
+                        mem_mb_per_node=1024)
+    cost = t.tres_cost_per_s(r)
+    tpu_part = t.tres_weights["gres/tpu"] * 4
+    assert tpu_part / cost > 0.9                  # TPU-seconds dominate
+
+
+def test_job_tres_vector_and_limits():
+    tres = job_tres(req(nodes=2, tpu=4))
+    assert tres["gres/tpu"] == 8
+    assert tres_within({}, tres, {"gres/tpu": 8})
+    assert not tres_within({"gres/tpu": 4}, tres, {"gres/tpu": 8})
+
+
+# ---------------------------------------------------- multifactor priority ----
+
+def test_starved_account_outranks_dominant():
+    c = small_cluster(n_nodes=1)
+    c.fairshare.add_account("hog")
+    c.fairshare.add_account("starved")
+    (blocker,) = c.submit("blocker", req(), run_time_s=100)
+    c.fairshare.charge("hog", req(nodes=4), elapsed_s=50_000.0, now=0.0)
+    (h,) = c.submit("h", req(), account="hog", run_time_s=10)
+    (s,) = c.submit("s", req(), account="starved", run_time_s=10)
+    engine = c.priority_engine
+    ph = engine.priority(c.jobs[h], c.clock, c.partitions, len(c.nodes))
+    ps = engine.priority(c.jobs[s], c.clock, c.partitions, len(c.nodes))
+    assert ps > ph
+    c.run()
+    assert c.jobs[s].start_time < c.jobs[h].start_time
+
+
+def test_dominant_account_recovers_after_decay():
+    """Usage is normalized to the total, so an idle ex-hog recovers as its
+    decayed history shrinks relative to others' fresh usage."""
+    t = FairShareTree(half_life_s=1000.0)
+    t.add_account("hog")
+    t.add_account("other")              # sibling splits the shares
+    t.charge("hog", req(nodes=4), elapsed_s=10_000.0, now=0.0)
+    low = t.fair_share_factor("hog")
+    assert low < 0.5
+    # hog idles for many half-lives while the sibling works: the hog's
+    # share of total usage collapses and its factor rises again
+    for k in range(1, 11):
+        t.charge("other", req(nodes=4), elapsed_s=1000.0, now=k * 1000.0)
+    assert t.norm_usage("hog") < 0.01
+    assert t.fair_share_factor("hog") > 0.9
+    assert t.fair_share_factor("other") < t.fair_share_factor("hog")
+
+
+def test_qos_boost_orders_queue():
+    c = small_cluster(n_nodes=1)
+    c.submit("blocker", req(), run_time_s=100)
+    (lo,) = c.submit("lo", req(), qos="scavenger", run_time_s=10)
+    (hi,) = c.submit("hi", req(), qos="high", run_time_s=10)
+    c.run()
+    assert c.jobs[hi].start_time < c.jobs[lo].start_time
+
+
+# ------------------------------------------------------------ preemption ----
+
+def test_high_preempts_scavenger_requeues_and_completes():
+    """The acceptance-criterion scenario, end to end."""
+    c = small_cluster(n_nodes=4)
+    (sc,) = c.submit("scav", req(nodes=4), user="bob", qos="scavenger",
+                     run_time_s=1000, ckpt_interval_s=100)
+    assert c.jobs[sc].state == JobState.RUNNING
+    c.clock = 250.0
+    (hi,) = c.submit("prod", req(nodes=4), user="alice", qos="high",
+                     run_time_s=50)
+    # eviction happened inside the submit's scheduling pass
+    assert c.jobs[hi].state == JobState.RUNNING
+    assert c.jobs[sc].state == JobState.PENDING
+    assert c.jobs[sc].requeue_count == 1
+    assert c.jobs[sc].progress_s == 200.0         # floor(250/100)*100
+    c.run()
+    assert c.jobs[sc].state == JobState.COMPLETED
+    assert c.jobs[hi].state == JobState.COMPLETED
+    # both segments accounted: PREEMPTED (250s) then COMPLETED (800s)
+    segs = [r for r in c.accounting if r.job_id == sc]
+    assert [r.state for r in segs] == ["PREEMPTED", "COMPLETED"]
+    assert segs[0].elapsed == pytest.approx(250.0)
+    assert segs[1].elapsed == pytest.approx(800.0)
+    # and sacct shows both rows (count the name column, not "scavenger")
+    out = commands.sacct(c)
+    assert out.count("scav ") == 2 and "PREEMPTED" in out
+    assert c.preemptions_total == 1
+
+
+def test_preempt_mode_cancel_kills_victim():
+    table = default_qos_table()
+    table["scavenger"] = QOS("scavenger", priority=0,
+                             preempt_mode=PREEMPT_CANCEL)
+    c = small_cluster(n_nodes=2, qos_table=table)
+    (sc,) = c.submit("scav", req(nodes=2), qos="scavenger", run_time_s=1000)
+    (hi,) = c.submit("prod", req(nodes=2), qos="high", run_time_s=10)
+    assert c.jobs[hi].state == JobState.RUNNING
+    assert c.jobs[sc].state == JobState.CANCELLED
+    assert c.jobs[sc].reason == f"PreemptedBy={hi}"
+    c.run()
+    assert c.jobs[sc].state == JobState.CANCELLED  # never resurrected
+
+
+def test_preemption_evicts_only_needed_victims():
+    c = small_cluster(n_nodes=4)
+    ids = [c.submit(f"s{i}", req(nodes=1), qos="scavenger",
+                    run_time_s=1000)[0] for i in range(4)]
+    (hi,) = c.submit("hi", req(nodes=2), qos="high", run_time_s=10)
+    assert c.jobs[hi].state == JobState.RUNNING
+    evicted = [j for j in ids if c.jobs[j].state == JobState.PENDING]
+    assert len(evicted) == 2                      # not all four
+    assert c.preemptions_total == 2
+
+
+def test_normal_cannot_preempt_normal():
+    c = small_cluster(n_nodes=1)
+    (a,) = c.submit("a", req(), qos="normal", run_time_s=1000)
+    (b,) = c.submit("b", req(), qos="normal", priority=9, run_time_s=10)
+    assert c.jobs[a].state == JobState.RUNNING    # b waits: no preemption
+    assert c.jobs[b].state == JobState.PENDING
+    assert c.preemptions_total == 0
+
+
+def test_preempted_job_restores_from_checkpoint_store(tmp_path):
+    from repro.checkpoint import store
+    ckpt = str(tmp_path / "job-ckpts")
+    # convention: the trainer saves step = seconds of completed work
+    store.save(ckpt, step=450, tree={"w": np.zeros(2)})
+    c = small_cluster(n_nodes=2)
+    (sc,) = c.submit("train", req(nodes=2), qos="scavenger",
+                     run_time_s=1000, checkpoint_dir=ckpt)
+    c.clock = 500.0
+    (hi,) = c.submit("prod", req(nodes=2), qos="high", run_time_s=10)
+    assert c.jobs[sc].state == JobState.PENDING
+    assert c.jobs[sc].progress_s == 450.0         # from the store, not lost
+    c.run()
+    assert c.jobs[sc].state == JobState.COMPLETED
+    segs = [r for r in c.accounting if r.job_id == sc]
+    assert segs[-1].elapsed == pytest.approx(550.0)   # only the remainder
+
+
+# ------------------------------------------------------------ QOS limits ----
+
+def test_grp_tres_limit_holds_jobs():
+    table = default_qos_table()
+    table["scavenger"] = QOS("scavenger", priority=0,
+                             grp_tres={"gres/tpu": 8})
+    c = small_cluster(n_nodes=4, qos_table=table)
+    a = c.submit("a", req(nodes=1), qos="scavenger", run_time_s=100)[0]
+    b = c.submit("b", req(nodes=1), qos="scavenger", run_time_s=100)[0]
+    h = c.submit("c", req(nodes=1), qos="scavenger", run_time_s=100)[0]
+    assert c.jobs[a].state == JobState.RUNNING
+    assert c.jobs[b].state == JobState.RUNNING    # 8 TPUs held = the cap
+    assert c.jobs[h].state == JobState.PENDING
+    assert c.jobs[h].reason == "QOSGrpResourceLimit"
+    c.tick()                                      # a+b end -> c admitted
+    assert c.jobs[h].state == JobState.RUNNING
+
+
+def test_grp_tres_is_per_account():
+    table = default_qos_table()
+    table["scavenger"] = QOS("scavenger", priority=0,
+                             grp_tres={"gres/tpu": 4})
+    c = small_cluster(n_nodes=4, qos_table=table)
+    a = c.submit("a", req(nodes=1), qos="scavenger", account="acct1",
+                 run_time_s=100)[0]
+    b = c.submit("b", req(nodes=1), qos="scavenger", account="acct2",
+                 run_time_s=100)[0]
+    assert c.jobs[a].state == JobState.RUNNING
+    assert c.jobs[b].state == JobState.RUNNING    # different account's cap
+
+
+def test_qos_max_wall_rejected():
+    table = default_qos_table()
+    table["scavenger"] = QOS("scavenger", max_wall_s=100)
+    c = small_cluster(qos_table=table)
+    with pytest.raises(ValueError):
+        c.submit("x", req(time_s=1000), qos="scavenger")
+
+
+def test_unknown_qos_rejected():
+    c = small_cluster()
+    with pytest.raises(ValueError):
+        c.submit("x", req(), qos="platinum")
+
+
+# -------------------------------------------------------------- fairness ----
+
+def test_fairshare_convergence_10k_events():
+    """Equal shares + persistent demand from two accounts -> accumulated
+    TRES usage parity within 10%, even though tenant B's jobs run 3x
+    longer (a FIFO scheduler would converge to ~3x instead)."""
+    c = small_cluster(n_nodes=4,
+                      fairshare=FairShareTree(half_life_s=50_000.0))
+    c.fairshare.add_account("tenant_a", shares=1)
+    c.fairshare.add_account("tenant_b", shares=1)
+    c.fairshare.add_user("ua", "tenant_a")
+    c.fairshare.add_user("ub", "tenant_b")
+
+    def refill():
+        for user, acct, rt in (("ua", "tenant_a", 60.0),
+                               ("ub", "tenant_b", 180.0)):
+            pending = sum(1 for j in c._pending() if j.account == acct)
+            while pending < 3:
+                c.submit("work", req(nodes=1), user=user, run_time_s=rt)
+                pending += 1
+
+    refill()
+    events = 0
+    while events < 10_000:
+        if not c.tick():
+            break
+        events += 1
+        refill()
+    assert events == 10_000
+
+    spent = {"tenant_a": 0.0, "tenant_b": 0.0}
+    for r in c.accounting:
+        spent[r.account] += r.tres_charged
+    ratio = spent["tenant_a"] / spent["tenant_b"]
+    assert 0.9 <= ratio <= 1.1, (ratio, spent)
+
+
+def test_unequal_shares_bias_service():
+    """10:1 shares with identical demand -> the big tenant gets more of
+    the cluster (sanity direction check on the same machinery)."""
+    c = small_cluster(n_nodes=4,
+                      fairshare=FairShareTree(half_life_s=20_000.0))
+    c.fairshare.add_account("big", shares=10)
+    c.fairshare.add_account("small", shares=1)
+
+    def refill():
+        for acct in ("big", "small"):
+            pending = sum(1 for j in c._pending() if j.account == acct)
+            while pending < 3:
+                c.submit("w", req(nodes=2), account=acct, run_time_s=120.0)
+                pending += 1
+
+    refill()
+    for _ in range(2000):
+        if not c.tick():
+            break
+        refill()
+    spent = {"big": 0.0, "small": 0.0}
+    for r in c.accounting:
+        if r.account in spent:
+            spent[r.account] += r.tres_charged
+    assert spent["big"] > spent["small"] * 1.5
+
+
+# ------------------------------------------------------------------- HA ----
+
+def test_ha_snapshot_preserves_fairshare_and_qos():
+    c = small_cluster()
+    c.fairshare.add_account("team", shares=7)
+    c.fairshare.add_user("alice", "team")
+    (a,) = c.submit("a", req(nodes=2), user="alice", run_time_s=30)
+    c.tick()
+    snap = c.snapshot()
+    standby = Cluster.restore(snap)
+    assert standby.fairshare.accounts["team"].shares == 7
+    assert standby.fairshare.account_of("alice") == "team"
+    assert standby.fairshare.usage["team"] == pytest.approx(
+        c.fairshare.usage["team"])
+    assert set(standby.qos_table) == set(c.qos_table)
+    # the restored controller keeps scheduling with the same policy
+    (b,) = standby.submit("b", req(), user="alice", qos="high", run_time_s=5)
+    standby.run()
+    assert standby.jobs[b].state == JobState.COMPLETED
+
+
+# ------------------------------------------------------------ monitoring ----
+
+def test_per_account_metrics_exported():
+    from repro.monitoring import MetricsRegistry
+    from repro.monitoring.metrics import (
+        METRIC_ACCOUNT_FAIRSHARE, METRIC_ACCOUNT_USAGE, METRIC_PREEMPTIONS,
+    )
+    c = small_cluster(n_nodes=2)
+    c.metrics = MetricsRegistry()
+    c.fairshare.add_account("team")
+    (sc,) = c.submit("s", req(nodes=2), account="team", qos="scavenger",
+                     run_time_s=500)
+    c.clock = 100.0
+    c.submit("h", req(nodes=2), qos="high", run_time_s=10)
+    c.run()
+    assert c.metrics.gauge(METRIC_PREEMPTIONS).value() == 1
+    assert c.metrics.gauge(METRIC_ACCOUNT_USAGE).value(account="team") > 0
+    f = c.metrics.gauge(METRIC_ACCOUNT_FAIRSHARE).value(account="team")
+    assert 0.0 < f < 1.0
+    text = c.metrics.expose()
+    assert 'slurm_account_tres_usage{account="team"}' in text
+    assert 'slurm_preempted_segments{account="team",qos="scavenger"}' in text

@@ -7,7 +7,10 @@
 * MoE dispatch: capacity bounds respected for random router outcomes.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:             # container has no hypothesis wheel
+    from _mini_hypothesis import given, settings, strategies as st
 
 from repro.cluster import (
     Cluster, JobState, Node, Partition, ResourceRequest,

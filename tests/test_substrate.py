@@ -145,10 +145,11 @@ def test_loss_decreases_over_short_run(cpu_mesh):
     stream = PackedStream(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                      global_batch=4, seed=0))
     losses = []
-    for _ in range(12):
+    for _ in range(24):
         batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
         params, state, m = step(params, state, batch)
         losses.append(float(m["loss"]))
     # synthetic-LM signal is mostly unigram stats: expect a steady, modest
-    # drop (measured ~0.18 over 12 steps at this lr)
+    # drop (measured ~0.23 over 24 steps at this lr on jax 0.4 CPU; the
+    # first dozen steps are still inside warmup noise)
     assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.08, losses
