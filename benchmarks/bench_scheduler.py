@@ -100,6 +100,59 @@ def bench_node_clone(results: list):
                     f"speedup={t_deep / t_clone:.1f}x"))
 
 
+def bench_dirty_set_256_nodes(results: list):
+    """schedule_pass used to clone *all* nodes into its working copy; the
+    ShadowNodes copy-on-write view clones only the dirty set (nodes touched
+    by tentative placements).  256 mostly-busy nodes, 8 startable jobs:
+    the pass clones 8 nodes, not 256."""
+    from repro.cluster.job import Job, JobState
+    from repro.cluster.scheduler import ShadowNodes, schedule_pass
+
+    n_nodes, n_busy, n_pending = 256, 248, 8
+    nodes = {
+        f"n{i:03d}": Node(name=f"n{i:03d}", cpus=16, mem_mb=65536,
+                          gres={"tpu": 4}, coord=(i // 16, i % 16))
+        for i in range(n_nodes)}
+    part = Partition(name="p", nodes=tuple(nodes), default=True)
+    r = ResourceRequest(nodes=1, gres_per_node={"tpu": 4}, time_limit_s=7200)
+    running, pending = [], []
+    for jid, nm in enumerate(list(nodes)[:n_busy], start=1):
+        job = Job(job_id=jid, name=f"r{jid}", user="u", partition="p", req=r,
+                  run_time_s=3600.0)
+        job.state = JobState.RUNNING
+        job.start_time = 0.0
+        job.nodes_alloc = (nm,)
+        nodes[nm].allocate(jid, r.cpus_per_node, r.mem_mb_per_node,
+                           r.gres_per_node)
+        running.append(job)
+    for k in range(n_pending):
+        pending.append(Job(job_id=1000 + k, name=f"p{k}", user="u",
+                           partition="p", req=r, run_time_s=600.0))
+
+    reps = 30
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        decision = schedule_pass(1.0, pending, running, nodes, {"p": part})
+    t_pass = (time.perf_counter() - t0) / reps
+    assert len(decision.starts) == n_pending, decision
+
+    # the eliminated overhead: the old full clone of the whole inventory
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _ = {nm: nd.clone() for nm, nd in nodes.items()}
+    t_full = (time.perf_counter() - t0) / reps
+
+    shadow = ShadowNodes(nodes)
+    for job_id, alloc in decision.starts:
+        for nm in alloc:
+            shadow.mutate(nm)
+    results.append((
+        "scheduler_pass_256_nodes_dirty_set", t_pass * 1e6,
+        f"dirty={shadow.dirty_count}/{n_nodes} nodes cloned; "
+        f"full-clone overhead {t_full * 1e6:,.0f}us/pass "
+        f"({(t_pass + t_full) / t_pass:.1f}x pass speedup)"))
+
+
 def bench_fairshare_scenario(results: list):
     """Two accounts at a 10:1 share ratio submitting identical mixed-QOS
     demand: report queue-wait fairness (mean wait per account) and the
@@ -146,4 +199,5 @@ def run(results: list):
     bench_scheduling_throughput(results)
     bench_backfill_modes(results)
     bench_node_clone(results)
+    bench_dirty_set_256_nodes(results)
     bench_fairshare_scenario(results)

@@ -1,0 +1,96 @@
+"""Multi-tenant serving tour: one decode engine, two tenants, one ledger.
+
+The serving twin of ``examples/multi_tenant.py``: the same ``repro.policy``
+fair-share machinery that orders the batch queue now drives request
+admission in the continuous-batching engine:
+
+* tenants are accounts — ``prod`` (8 shares) vs ``research`` (1 share) in
+  one :class:`~repro.policy.FairShareTree`;
+* every admitted slot is picked by the ``2^(-usage/shares)`` multifactor
+  priority, and every generated token / resident KV-cache line charges the
+  tenant's account — so sustained load converges to the share ratio;
+* research rides the ``scavenger`` QOS: discounted billing, but a blocked
+  ``high`` request from prod evicts one of its slots; the victim requeues
+  with its partial output retained and resumes where it stopped.
+
+Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.models import init_params
+from repro.monitoring import MetricsRegistry
+from repro.monitoring.metrics import (
+    METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_TENANT_TOKENS,
+)
+from repro.serving import AdmissionController, DecodeEngine, Request
+
+
+def main():
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    metrics = MetricsRegistry()
+
+    print("== tenants: prod (8 shares) vs research (1 share) ==")
+    admission = AdmissionController()
+    admission.add_tenant("prod", shares=8)
+    admission.add_tenant("research", shares=1)
+    engine = DecodeEngine(cfg, params, num_slots=2, cache_len=128,
+                          metrics=metrics, admission=admission)
+
+    rng = np.random.default_rng(0)
+
+    def req(rid, tenant, qos="normal", max_new=8):
+        return Request(rid=rid,
+                       prompt=rng.integers(0, cfg.vocab_size, 12).astype(
+                           np.int32),
+                       max_new_tokens=max_new, tenant=tenant, qos=qos)
+
+    print("== research scavenges both slots while prod is idle ==")
+    sweeps = [req(i, "research", qos="scavenger", max_new=48)
+              for i in range(2)]
+    for r in sweeps:
+        engine.submit(r)
+    for _ in range(6):
+        engine.step()
+    print(f"scavenger progress: "
+          f"{[len(r.output) for r in sweeps]} tokens decoded\n")
+
+    print("== a blocked high-QOS prod request preempts one slot ==")
+    urgent = req(10, "prod", qos="high", max_new=8)
+    engine.submit(urgent)
+    engine.step()
+    victim = next(r for r in sweeps if r.preemptions)
+    print(f"evictions: "
+          f"{metrics.counter(METRIC_SERVE_PREEMPTIONS).value():.0f}  "
+          f"(victim rid={victim.rid} keeps {len(victim.output)} tokens)\n")
+
+    engine.run_to_completion()                 # drain the sweeps
+    assert urgent.done and all(r.done for r in sweeps)
+
+    print("== sustained load converges toward the 8:1 share ratio ==")
+    tok = metrics.counter(METRIC_SERVE_TENANT_TOKENS)
+    base = {t: tok.value(tenant=t) for t in ("prod", "research")}
+    rid = 20
+    for _ in range(250):
+        for tenant in ("prod", "research"):
+            while admission.queued(tenant) < 3:
+                engine.submit(req(rid, tenant, max_new=4))
+                rid += 1
+        engine.step()
+
+    prod_t = tok.value(tenant="prod") - base["prod"]
+    res_t = tok.value(tenant="research") - base["research"]
+    print(f"tokens this window: prod={prod_t:.0f} research={res_t:.0f} "
+          f"(ratio {prod_t / max(res_t, 1):.1f}:1 — research entered the "
+          f"window over-served from scavenging, so fair-share claws back "
+          f"above 8:1 before settling)")
+    engine.run_to_completion()                 # drain the tail quietly
+    print("\n== the shared ledger (what sshare would report) ==")
+    for name in ("prod", "research"):
+        print(f"{name:<10} usage={admission.tree.usage[name]:10.1f} "
+              f"fairshare={admission.tree.fair_share_factor(name):.4f}")
+
+
+if __name__ == "__main__":
+    main()

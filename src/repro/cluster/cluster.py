@@ -14,7 +14,7 @@ The fair-share ledger rides along, so a failover keeps every tenant's decayed
 usage (no free reset for the hog).
 
 Multi-tenancy: every job belongs to an (account, QOS) pair.  Queue order
-comes from the multifactor fair-share engine (``fairshare.py``); finished
+comes from the multifactor fair-share engine (``repro.policy``); finished
 and preempted segments charge TRES-seconds to the account tree; a high-QOS
 job that cannot start may preempt scavenger/normal victims, which requeue
 (keeping checkpointed progress via ``repro.checkpoint.store``) or are
@@ -26,17 +26,15 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.cluster.fairshare import (
-    FairShareTree, MultifactorPriority, PriorityWeights,
-)
 from repro.cluster.job import (
     Dependency, DependencyKind, Job, JobState, ResourceRequest,
 )
 from repro.cluster.node import Node, NodeState, Partition
-from repro.cluster.qos import (
-    PREEMPT_CANCEL, QOS, default_qos_table,
-)
 from repro.cluster.scheduler import Decision, schedule_pass
+from repro.policy import (
+    PREEMPT_CANCEL, QOS, FairShareTree, MultifactorPriority,
+    PriorityWeights, default_qos_table,
+)
 
 #: bound on preempt -> requeue -> rerun cycles inside one schedule() call
 _MAX_PREEMPT_ROUNDS = 8

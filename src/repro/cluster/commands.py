@@ -10,7 +10,7 @@ from typing import Optional
 from repro.cluster.cluster import Cluster
 from repro.cluster.job import Job, JobState, ResourceRequest
 from repro.cluster.node import NodeState
-from repro.cluster.qos import format_tres
+from repro.policy import format_tres
 
 
 def _fmt_time(seconds: Optional[float]) -> str:

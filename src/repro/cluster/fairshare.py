@@ -1,265 +1,20 @@
-"""Fair-share: sacctmgr-style account tree + TRES usage ledger + multifactor
-priority.
+"""Compatibility shim — the tenancy layer moved to :mod:`repro.policy`.
 
-This is the policy substrate behind the paper's §3.2.3 "fairness policies"
-claim.  Three pieces, mirroring real SLURM's priority/multifactor plugin:
+The account tree, TRES usage ledger, and multifactor priority engine are
+engine-agnostic policy (the serving admission controller consults the same
+ledger), so they live in ``repro.policy.{accounts,usage,priority}`` now.
+This module keeps the historical import path working::
 
-* **Account tree** — a hierarchy of accounts (``root`` → org → team) with
-  raw *shares*; users associate to exactly one account.  Normalized shares
-  are computed sibling-relative and multiplied down the tree, exactly like
-  ``sshare``'s NormShares column.
-
-* **Usage ledger** — every finished (or preempted) job segment charges its
-  account ``elapsed × TRES-cost`` where the cost weights GPU/TPU-seconds
-  far above CPU/mem (``TRESBillingWeights``).  Usage decays with an
-  exponential half-life (``PriorityDecayHalfLife``), so yesterday's hog is
-  not punished forever.  Charges propagate to all ancestors.
-
-* **Multifactor priority** — the classic SLURM composition::
-
-      prio = W_age  * age_factor
-           + W_fs   * 2^(-usage/shares)        (the fair-share factor)
-           + W_size * job_size_factor
-           + W_part * partition_factor
-           + W_qos  * qos_factor
-           + nice   (the job's static priority)
-
-  Starved accounts rise (usage decays toward 0 → factor → 1); dominant
-  accounts sink (usage ≫ shares → factor → 0).  The convergence property
-  is proven in ``tests/test_multitenant.py``.
+    from repro.cluster.fairshare import FairShareTree   # still fine
+    from repro.policy import FairShareTree              # preferred
 """
-from __future__ import annotations
+from repro.policy.accounts import Account, AccountTree
+from repro.policy.priority import (
+    MultifactorPriority, PriorityBreakdown, PriorityWeights,
+)
+from repro.policy.usage import DEFAULT_TRES_WEIGHTS, FairShareTree
 
-from dataclasses import dataclass
-from typing import Optional
-
-from repro.cluster.job import Job
-from repro.cluster.qos import QOS, job_tres
-
-#: TRESBillingWeights — accelerator-seconds dominate the charge.
-DEFAULT_TRES_WEIGHTS = {
-    "gres/tpu": 1.0,
-    "gres/gpu": 1.0,
-    "cpu": 0.04,
-    "mem": 1e-5,          # per MB-second
-}
-
-
-@dataclass
-class Account:
-    """One node of the sacctmgr association tree."""
-    name: str
-    parent: Optional[str] = "root"      # None only for root itself
-    shares: int = 1
-    description: str = ""
-
-
-class FairShareTree:
-    """Account hierarchy + decayed TRES usage ledger."""
-
-    def __init__(self, half_life_s: float = 7 * 86_400.0,
-                 tres_weights: Optional[dict] = None):
-        assert half_life_s > 0
-        self.half_life_s = half_life_s
-        self.tres_weights = dict(tres_weights or DEFAULT_TRES_WEIGHTS)
-        self.accounts: dict[str, Account] = {
-            "root": Account("root", parent=None, shares=1)}
-        self.user_account: dict[str, str] = {}
-        self.usage: dict[str, float] = {"root": 0.0}
-        self._last_decay: float = 0.0
-
-    # ------------------------------------------------------------- admin ----
-    def add_account(self, name: str, parent: str = "root",
-                    shares: int = 1, description: str = "") -> Account:
-        """``sacctmgr add account <name> parent=<p> fairshare=<shares>``."""
-        assert name not in self.accounts, f"account {name!r} exists"
-        assert parent in self.accounts, f"unknown parent {parent!r}"
-        assert shares >= 1
-        acct = Account(name, parent=parent, shares=shares,
-                       description=description)
-        self.accounts[name] = acct
-        self.usage.setdefault(name, 0.0)
-        return acct
-
-    def add_user(self, user: str, account: str):
-        """``sacctmgr add user <u> account=<a>`` (one association/user)."""
-        assert account in self.accounts, f"unknown account {account!r}"
-        self.user_account[user] = account
-
-    def account_of(self, user: str, default: str = "root") -> str:
-        return self.user_account.get(user, default)
-
-    def children(self, name: str) -> list[Account]:
-        return [a for a in self.accounts.values() if a.parent == name]
-
-    def _ancestors(self, name: str):
-        """name, parent, ..., root."""
-        while name is not None:
-            acct = self.accounts[name]
-            yield acct
-            name = acct.parent
-
-    # ------------------------------------------------------------- usage ----
-    def decay_to(self, now: float):
-        """Apply exponential half-life decay up to ``now``."""
-        dt = now - self._last_decay
-        if dt <= 0:
-            return
-        factor = 2.0 ** (-dt / self.half_life_s)
-        for name in self.usage:
-            self.usage[name] *= factor
-        self._last_decay = now
-
-    def tres_cost_per_s(self, req) -> float:
-        """Billing rate of one job-second for this resource request."""
-        cost = 0.0
-        for key, amount in job_tres(req).items():
-            cost += self.tres_weights.get(key, 0.0) * amount
-        return cost
-
-    def charge(self, account: str, req, elapsed_s: float, now: float,
-               usage_factor: float = 1.0) -> float:
-        """Charge ``elapsed_s`` of the request's TRES to the account chain.
-
-        Returns the charged amount (weighted TRES-seconds).
-        """
-        if account not in self.accounts:        # auto-associate unknowns
-            self.add_account(account)
-        self.decay_to(now)
-        amount = self.tres_cost_per_s(req) * max(elapsed_s, 0.0) * usage_factor
-        for acct in self._ancestors(account):
-            self.usage[acct.name] = self.usage.get(acct.name, 0.0) + amount
-        return amount
-
-    # ----------------------------------------------------------- factors ----
-    def norm_shares(self, name: str) -> float:
-        """Sibling-relative shares multiplied down from root (sshare col)."""
-        assert name in self.accounts, f"unknown account {name!r}"
-        frac = 1.0
-        for acct in self._ancestors(name):
-            if acct.parent is None:
-                break
-            level = sum(a.shares for a in self.children(acct.parent))
-            frac *= acct.shares / max(level, 1)
-        return frac
-
-    def norm_usage(self, name: str) -> float:
-        total = self.usage.get("root", 0.0)
-        if total <= 0:
-            return 0.0
-        return self.usage.get(name, 0.0) / total
-
-    def fair_share_factor(self, account: str) -> float:
-        """The classic SLURM ``2^(-usage/shares)`` in [0, 1]."""
-        if account not in self.accounts:
-            return 1.0                          # never-seen account: fresh
-        shares = self.norm_shares(account)
-        if shares <= 0:
-            return 0.0
-        return 2.0 ** (-self.norm_usage(account) / shares)
-
-    # ---------------------------------------------------------- snapshot ----
-    def snapshot(self) -> dict:
-        return {
-            "half_life_s": self.half_life_s,
-            "tres_weights": dict(self.tres_weights),
-            "accounts": [(a.name, a.parent, a.shares, a.description)
-                         for a in self.accounts.values()],
-            "user_account": dict(self.user_account),
-            "usage": dict(self.usage),
-            "last_decay": self._last_decay,
-        }
-
-    @classmethod
-    def restore(cls, snap: dict) -> "FairShareTree":
-        t = cls(half_life_s=snap["half_life_s"],
-                tres_weights=snap["tres_weights"])
-        for name, parent, shares, desc in snap["accounts"]:
-            if name == "root":
-                continue
-            t.accounts[name] = Account(name, parent=parent, shares=shares,
-                                       description=desc)
-        t.user_account = dict(snap["user_account"])
-        t.usage = dict(snap["usage"])
-        t._last_decay = snap["last_decay"]
-        return t
-
-
-@dataclass(frozen=True)
-class PriorityWeights:
-    """slurm.conf ``PriorityWeight*`` knobs."""
-    age: float = 1_000.0
-    fairshare: float = 10_000.0
-    job_size: float = 500.0
-    partition: float = 1_000.0
-    qos: float = 2_000.0
-    max_age_s: float = 7 * 86_400.0     # PriorityMaxAge
-
-
-@dataclass(frozen=True)
-class PriorityBreakdown:
-    """One sprio row: the weighted components and their sum."""
-    job_id: int
-    age: float
-    fairshare: float
-    job_size: float
-    partition: float
-    qos: float
-    nice: float
-
-    @property
-    def total(self) -> float:
-        return (self.age + self.fairshare + self.job_size + self.partition
-                + self.qos + self.nice)
-
-
-class MultifactorPriority:
-    """The priority/multifactor plugin: compose factors into one number."""
-
-    def __init__(self, tree: FairShareTree,
-                 qos_table: dict[str, QOS],
-                 weights: PriorityWeights = PriorityWeights()):
-        self.tree = tree
-        self.qos_table = qos_table
-        self.weights = weights
-
-    def breakdown(self, job: Job, now: float, partitions: dict,
-                  cluster_nodes: int) -> PriorityBreakdown:
-        w = self.weights
-        age = min(max(now - job.submit_time, 0.0) / w.max_age_s, 1.0)
-        fs = self.tree.fair_share_factor(job.account)
-        size = job.req.nodes / max(cluster_nodes, 1)
-        part = partitions[job.partition].priority_tier if job.partition in \
-            partitions else 1
-        max_tier = max((p.priority_tier for p in partitions.values()),
-                       default=1)
-        qos = self.qos_table.get(job.qos)
-        max_qos = max((q.priority for q in self.qos_table.values()),
-                      default=1) or 1
-        return PriorityBreakdown(
-            job_id=job.job_id,
-            age=w.age * age,
-            fairshare=w.fairshare * fs,
-            job_size=w.job_size * size,
-            partition=w.partition * part / max(max_tier, 1),
-            qos=w.qos * (qos.priority / max_qos if qos else 0.0),
-            nice=float(job.priority),
-        )
-
-    def priority(self, job: Job, now: float, partitions: dict,
-                 cluster_nodes: int) -> float:
-        return self.breakdown(job, now, partitions, cluster_nodes).total
-
-    def priority_fn(self, now: float, partitions: dict, cluster_nodes: int):
-        """A ``job -> priority`` callable for one scheduling pass (the
-        fair-share factor is frozen at pass start, like SLURM's decay tick).
-        """
-        cache: dict[int, float] = {}
-
-        def fn(job: Job) -> float:
-            p = cache.get(job.job_id)
-            if p is None:
-                p = self.priority(job, now, partitions, cluster_nodes)
-                cache[job.job_id] = p
-            return p
-        return fn
+__all__ = [
+    "Account", "AccountTree", "DEFAULT_TRES_WEIGHTS", "FairShareTree",
+    "MultifactorPriority", "PriorityBreakdown", "PriorityWeights",
+]

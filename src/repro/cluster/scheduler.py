@@ -36,7 +36,46 @@ from typing import Callable, Optional
 
 from repro.cluster.job import Job, JobState
 from repro.cluster.node import Node, NodeState, Partition
-from repro.cluster.qos import QOS, add_tres, job_tres, tres_within
+from repro.policy import QOS, add_tres, job_tres, tres_within
+
+
+class ShadowNodes:
+    """Copy-on-write working view of the node inventory for one pass.
+
+    Reads pass through to the base mapping; a node is cloned only when a
+    tentative placement actually touches it (``mutate``).  A pass that
+    starts k small jobs on a 256-node cluster clones k·nodes-per-job
+    nodes instead of all 256 — the dirty set, not the inventory, bounds
+    the per-pass copy cost.  Layers compose: projected/preemption shadows
+    stack another ShadowNodes on top of the pass's working view.
+    """
+    __slots__ = ("_base", "_names", "_dirty")
+
+    def __init__(self, base, names=None):
+        self._base = base                   # dict[str, Node] or ShadowNodes
+        self._names = set(names) if names is not None else None
+        self._dirty: dict[str, Node] = {}
+
+    def __getitem__(self, name: str) -> Node:
+        node = self._dirty.get(name)
+        return node if node is not None else self._base[name]
+
+    def __contains__(self, name: str) -> bool:
+        if self._names is not None:
+            return name in self._names
+        return name in self._dirty or name in self._base
+
+    def mutate(self, name: str) -> Node:
+        """The node's private clone, created on first touch."""
+        node = self._dirty.get(name)
+        if node is None:
+            node = self._base[name].clone()
+            self._dirty[name] = node
+        return node
+
+    @property
+    def dirty_count(self) -> int:
+        return len(self._dirty)
 
 
 @dataclass(frozen=True)
@@ -110,8 +149,8 @@ def _projected_allocation(job: Job, nodes: dict[str, Node],
                           partition: Partition, running: list[Job],
                           now: float) -> Optional[Reservation]:
     """Earliest-start reservation from projected job-end releases."""
-    # replay releases in end-time order on a clone of the free state
-    shadow = {nm: nodes[nm].clone() for nm in partition.nodes}
+    # replay releases in end-time order on a copy-on-write shadow
+    shadow = ShadowNodes(nodes, names=partition.nodes)
     events = sorted(
         ((j.start_time + j.runtime(), j.job_id, j) for j in running
          if j.start_time is not None),
@@ -123,7 +162,7 @@ def _projected_allocation(job: Job, nodes: dict[str, Node],
         if ending is not None:
             for nm in ending.nodes_alloc:
                 if nm in shadow:
-                    shadow[nm].release(
+                    shadow.mutate(nm).release(
                         ending.job_id, ending.req.cpus_per_node,
                         ending.req.mem_mb_per_node, ending.req.gres_per_node)
             t = when
@@ -154,12 +193,12 @@ def _preemption_victims(job: Job, work: dict[str, Node],
     if not candidates:
         return None
     candidates.sort(key=rank, reverse=True)       # worst-ranked first
-    shadow = {nm: work[nm].clone() for nm in partition.nodes}
+    shadow = ShadowNodes(work, names=partition.nodes)
     evicted: list[Job] = []
     for victim in candidates:
         for nm in victim.nodes_alloc:
             if nm in shadow:
-                shadow[nm].release(
+                shadow.mutate(nm).release(
                     victim.job_id, victim.req.cpus_per_node,
                     victim.req.mem_mb_per_node, victim.req.gres_per_node)
         evicted.append(victim)
@@ -205,8 +244,9 @@ def schedule_pass(now: float, pending: list[Job], running: list[Job],
     reservations: list[Reservation] = []
     preemptions: list[Preemption] = []
     holds: list[tuple[int, str]] = []
-    # working copy of node state so successive starts see earlier ones
-    work = {nm: n.clone() for nm, n in nodes.items()}
+    # copy-on-write working view so successive starts see earlier ones
+    # without cloning the whole inventory (dirty-set incremental clone)
+    work = ShadowNodes(nodes)
     run_proj = list(running)
     grp_usage = _grp_tres_usage(running)
 
@@ -229,9 +269,9 @@ def schedule_pass(now: float, pending: list[Job], running: list[Job],
             if not conflict:
                 starts.append((job.job_id, alloc))
                 for nm in alloc:
-                    work[nm].allocate(job.job_id, job.req.cpus_per_node,
-                                      job.req.mem_mb_per_node,
-                                      job.req.gres_per_node)
+                    work.mutate(nm).allocate(
+                        job.job_id, job.req.cpus_per_node,
+                        job.req.mem_mb_per_node, job.req.gres_per_node)
                 add_tres(grp_usage.setdefault((job.qos, job.account), {}),
                          my_tres)
                 # projected running job for later reservations

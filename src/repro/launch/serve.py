@@ -1,17 +1,40 @@
 """`python -m repro.launch.serve` — batched serving entry point: spin up the
 DecodeEngine on a (reduced) architecture and push a synthetic request load
-through it, reporting throughput/latency metrics.
+through it, reporting throughput/latency metrics — per tenant when
+``--tenants`` carves the engine into fair-share slices.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced_config
 from repro.models import init_params
 from repro.monitoring import MetricsRegistry
-from repro.serving import DecodeEngine, Request
+from repro.monitoring.metrics import METRIC_SERVE_TENANT_TOKENS
+from repro.serving import AdmissionController, DecodeEngine, Request
+
+
+def parse_tenants(spec: str, shares: str = "") -> dict[str, int]:
+    """``alice:8,bob:1`` (or ``--tenants alice,bob --shares 8,1``) ->
+    {"alice": 8, "bob": 1}."""
+    out: dict[str, int] = {}
+    names = [p.strip() for p in spec.split(",") if p.strip()]
+    extra = [s.strip() for s in shares.split(",") if s.strip()] if shares \
+        else []
+    for i, part in enumerate(names):
+        name, _, inline = part.partition(":")
+        if inline:
+            share = int(inline)
+        elif i < len(extra):
+            share = int(extra[i])
+        else:
+            share = 1
+        assert share >= 1, f"tenant {name!r}: shares must be >= 1"
+        out[name] = share
+    return out
 
 
 def main(argv=None) -> int:
@@ -23,29 +46,50 @@ def main(argv=None) -> int:
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tenants", default="",
+                    help="tenant:shares list, e.g. alice:8,bob:1 "
+                         "(empty: single default tenant)")
+    ap.add_argument("--shares", default="",
+                    help="shares for --tenants given as bare names, "
+                         "e.g. --tenants alice,bob --shares 8,1")
     args = ap.parse_args(argv)
 
     cfg = (get_reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
     params = init_params(cfg, args.seed)
     metrics = MetricsRegistry()
+    tenants = parse_tenants(args.tenants, args.shares) if args.tenants \
+        else {"default": 1}
+    admission = AdmissionController()
+    for name, share in tenants.items():
+        admission.add_tenant(name, shares=share)
     engine = DecodeEngine(cfg, params, num_slots=args.slots,
-                          cache_len=args.cache_len, metrics=metrics)
+                          cache_len=args.cache_len, metrics=metrics,
+                          admission=admission)
     rng = np.random.default_rng(args.seed)
+    names = list(tenants)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.cache_len // 4))
         engine.submit(Request(
             rid=rid,
             prompt=rng.integers(2, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=args.max_new,
-            temperature=float(rid % 2) * 0.8))
-    import time
+            temperature=float(rid % 2) * 0.8,
+            tenant=names[rid % len(names)]))
     t0 = time.perf_counter()
     engine.run_to_completion()
     wall = time.perf_counter() - t0
     total = int(metrics.counter("serve_tokens_generated").value())
     print(f"served {args.requests} requests, {total} tokens in {wall:.1f}s "
           f"({total / wall:,.1f} tok/s, {args.slots} slots)")
+    if len(names) > 1 and total:
+        tok = metrics.counter(METRIC_SERVE_TENANT_TOKENS)
+        parts = []
+        for name in names:
+            n = int(tok.value(tenant=name))
+            parts.append(f"{name}[{tenants[name]}sh]={n} "
+                         f"({n / total:.0%})")
+        print("per-tenant tokens: " + "  ".join(parts))
     print(f"decode p50 "
           f"{metrics.histogram('serve_decode_seconds').quantile(0.5)*1e3:.1f}"
           f"ms  p99 "

@@ -34,6 +34,15 @@ METRIC_ACCOUNT_USAGE = "slurm_account_tres_usage"
 #: the 2^(-usage/shares) fair-share factor, labeled {account=}
 METRIC_ACCOUNT_FAIRSHARE = "slurm_account_fairshare_factor"
 
+# Multi-tenant serving (the admission controller shares the fair-share
+# ledger above; these series break the decode engine down per tenant).
+#: generated tokens, labeled {tenant=}
+METRIC_SERVE_TENANT_TOKENS = "serve_tenant_tokens_generated"
+#: admitted requests (incl. resumed preemption victims), labeled {tenant=}
+METRIC_SERVE_TENANT_ADMITTED = "serve_tenant_requests_admitted"
+#: decode slots evicted for a higher-QOS request
+METRIC_SERVE_PREEMPTIONS = "serve_preemptions_total"
+
 
 def _labels_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))

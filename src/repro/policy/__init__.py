@@ -1,0 +1,38 @@
+"""Engine-agnostic multi-tenancy policy: the account tree, TRES usage
+ledger, QOS tiers, and multifactor priority that both the batch scheduler
+(`repro.cluster`) and the serving admission controller (`repro.serving`)
+consult.
+
+Dependency rule: this package imports nothing from ``repro.cluster`` or
+``repro.serving`` — the dependency arrow points inward only.  Jobs,
+requests, and partitions are duck-typed (``req.nodes``,
+``partition.priority_tier``, ...), so any execution engine can bring its
+own workload type and still share one ledger.
+
+Layout (one concern per module):
+
+* :mod:`repro.policy.accounts` — the sacctmgr association tree (accounts,
+  shares, users, normalized shares);
+* :mod:`repro.policy.usage` — the decayed TRES usage ledger
+  (:class:`FairShareTree` = accounts + usage) with billing weights;
+* :mod:`repro.policy.priority` — SLURM's priority/multifactor composition
+  around the classic ``2^(-usage/shares)`` fair-share factor;
+* :mod:`repro.policy.qos` — QOS tiers: priority boosts, GrpTRES caps,
+  preemption rules, and the TRES vector helpers.
+"""
+from repro.policy.accounts import Account, AccountTree
+from repro.policy.priority import (
+    MultifactorPriority, PriorityBreakdown, PriorityWeights,
+)
+from repro.policy.qos import (
+    PREEMPT_CANCEL, PREEMPT_REQUEUE, QOS, add_tres, default_qos_table,
+    format_tres, job_tres, tres_within,
+)
+from repro.policy.usage import DEFAULT_TRES_WEIGHTS, FairShareTree
+
+__all__ = [
+    "Account", "AccountTree", "DEFAULT_TRES_WEIGHTS", "FairShareTree",
+    "MultifactorPriority", "PREEMPT_CANCEL", "PREEMPT_REQUEUE",
+    "PriorityBreakdown", "PriorityWeights", "QOS", "add_tres",
+    "default_qos_table", "format_tres", "job_tres", "tres_within",
+]

@@ -1,0 +1,74 @@
+"""The sacctmgr association tree: accounts, raw shares, user bindings.
+
+A hierarchy of accounts (``root`` → org → team) with raw *shares*; users
+associate to exactly one account.  Normalized shares are computed
+sibling-relative and multiplied down the tree, exactly like ``sshare``'s
+NormShares column.
+
+Pure structure — no usage, no clocks.  The decayed TRES ledger that turns
+this tree into a fair-share engine lives in :mod:`repro.policy.usage`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass
+class Account:
+    """One node of the sacctmgr association tree."""
+    name: str
+    parent: Optional[str] = "root"      # None only for root itself
+    shares: int = 1
+    description: str = ""
+
+
+class AccountTree:
+    """Account hierarchy + user associations (the ``sacctmgr`` surface)."""
+
+    def __init__(self):
+        self.accounts: dict[str, Account] = {
+            "root": Account("root", parent=None, shares=1)}
+        self.user_account: dict[str, str] = {}
+
+    # ------------------------------------------------------------- admin ----
+    def add_account(self, name: str, parent: str = "root",
+                    shares: int = 1, description: str = "") -> Account:
+        """``sacctmgr add account <name> parent=<p> fairshare=<shares>``."""
+        assert name not in self.accounts, f"account {name!r} exists"
+        assert parent in self.accounts, f"unknown parent {parent!r}"
+        assert shares >= 1
+        acct = Account(name, parent=parent, shares=shares,
+                       description=description)
+        self.accounts[name] = acct
+        return acct
+
+    def add_user(self, user: str, account: str):
+        """``sacctmgr add user <u> account=<a>`` (one association/user)."""
+        assert account in self.accounts, f"unknown account {account!r}"
+        self.user_account[user] = account
+
+    def account_of(self, user: str, default: str = "root") -> str:
+        return self.user_account.get(user, default)
+
+    def children(self, name: str) -> list[Account]:
+        return [a for a in self.accounts.values() if a.parent == name]
+
+    def _ancestors(self, name: str):
+        """name, parent, ..., root."""
+        while name is not None:
+            acct = self.accounts[name]
+            yield acct
+            name = acct.parent
+
+    # ----------------------------------------------------------- factors ----
+    def norm_shares(self, name: str) -> float:
+        """Sibling-relative shares multiplied down from root (sshare col)."""
+        assert name in self.accounts, f"unknown account {name!r}"
+        frac = 1.0
+        for acct in self._ancestors(name):
+            if acct.parent is None:
+                break
+            level = sum(a.shares for a in self.children(acct.parent))
+            frac *= acct.shares / max(level, 1)
+        return frac

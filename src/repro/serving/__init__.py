@@ -1,5 +1,9 @@
+from repro.serving.admission import (
+    AdmissionController, SERVING_TRES_WEIGHTS, Tenant,
+)
 from repro.serving.engine import DecodeEngine, Request
 from repro.serving.serve_step import make_serve_step, serve_step_lowering_args
 
-__all__ = ["DecodeEngine", "Request", "make_serve_step",
+__all__ = ["AdmissionController", "DecodeEngine", "Request",
+           "SERVING_TRES_WEIGHTS", "Tenant", "make_serve_step",
            "serve_step_lowering_args"]

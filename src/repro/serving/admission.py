@@ -1,0 +1,233 @@
+"""Multi-tenant admission for the decode engine: the serving half of the
+shared tenancy core.
+
+The batch scheduler (``repro.cluster``) and this controller consult the
+*same* ``repro.policy`` machinery — one account tree, one decayed TRES
+ledger, one QOS catalogue — so a single ``sshare`` call reports a tenant's
+batch jobs *and* served tokens against one set of shares.
+
+Per-tenant FIFO queues replace the engine's single deque.  When a slot
+frees, the next request comes from the tenant maximizing the same
+multifactor composition the scheduler uses::
+
+    W_fs * 2^(-usage/shares) + W_qos * qos_priority_norm
+
+with FIFO arrival order breaking ties.  Serving consumption charges the
+ledger in serving TRES units: generated tokens and KV-cache residency
+(cache lines held per decode step), discounted by the QOS
+``usage_factor`` exactly like batch scavenger cycles.
+
+QOS rules carry over unchanged:
+
+* ``grp_tres`` — a tenant's concurrent decode slots are capped via the
+  ``slots`` TRES key (``QOS(grp_tres={"slots": 2})``): the GrpTRES hold
+  that keeps one tenant from monopolizing the batch;
+* ``preempt`` — a queued high-QOS request that finds no free slot may
+  evict one running preemptable (e.g. scavenger) slot; the victim
+  requeues at the head of its tenant queue with its partial output
+  retained and resumes from where it stopped.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.policy import (
+    FairShareTree, PriorityWeights, QOS, default_qos_table, tres_within,
+)
+
+#: Serving TRES billing weights, merged into the shared ledger's
+#: TRESBillingWeights on attach (setdefault — an operator override wins).
+#: One generated token bills like one accelerator-second; KV residency is
+#: a light rent so long-context requests pay for the memory they pin.
+SERVING_TRES_WEIGHTS = {
+    "tokens": 1.0,            # one generated token
+    "gres/kv_token": 0.001,   # one KV-cache line resident for one step
+}
+
+#: TRES key for concurrent decode slots (GrpTRES caps, e.g. {"slots": 2}).
+TRES_SLOTS = "slots"
+
+
+@dataclass
+class Tenant:
+    """One serving tenant: an account in the shared tree + a FIFO queue."""
+    name: str
+    shares: int = 1
+    queue: collections.deque = field(default_factory=collections.deque)
+    # decode slots currently held, keyed by QOS — GrpTRES caps are
+    # per-(account, QOS), matching the batch scheduler's accounting
+    slots_by_qos: dict = field(default_factory=dict)
+
+    @property
+    def slots_held(self) -> int:
+        return sum(self.slots_by_qos.values())
+
+
+class AdmissionController:
+    """Per-tenant queues + fair-share pick + QOS caps/preemption.
+
+    All bookkeeping is host-side Python over O(tenants) dicts — nothing
+    here touches the jitted decode path.
+    """
+
+    def __init__(self, tree: Optional[FairShareTree] = None,
+                 qos_table: Optional[dict[str, QOS]] = None,
+                 weights: Optional[PriorityWeights] = None):
+        self.tree = tree if tree is not None else FairShareTree()
+        for key, w in SERVING_TRES_WEIGHTS.items():
+            self.tree.tres_weights.setdefault(key, w)
+        self.qos_table = dict(qos_table) if qos_table is not None \
+            else default_qos_table()
+        self.weights = weights or PriorityWeights()
+        self.tenants: dict[str, Tenant] = {}
+        self._seq = itertools.count()      # global FIFO arrival order
+
+    # ----------------------------------------------------------- tenants ----
+    def add_tenant(self, name: str, shares: int = 1) -> Tenant:
+        """Register a tenant (idempotent).  Reuses an existing account in
+        a shared tree — so a batch account and a serving tenant with the
+        same name are literally the same ledger row.  For a pre-existing
+        account the ledger's shares are authoritative (priorities come
+        from ``tree.norm_shares``): the ``shares`` argument is ignored
+        and the tenant reports the tree's value."""
+        t = self.tenants.get(name)
+        if t is not None:
+            return t
+        if name not in self.tree.accounts:
+            self.tree.add_account(name, shares=shares)
+        else:
+            shares = self.tree.accounts[name].shares
+        t = Tenant(name, shares=shares)
+        self.tenants[name] = t
+        return t
+
+    # ------------------------------------------------------------ queues ----
+    def submit(self, req):
+        """Enqueue a request on its tenant's FIFO (auto-registering an
+        unknown tenant with 1 share, like the scheduler's lenient
+        auto-association)."""
+        t = self.add_tenant(req.tenant)
+        req._seq = next(self._seq)
+        t.queue.append(req)
+
+    def requeue(self, req):
+        """A preempted request goes back to the *head* of its tenant's
+        queue, partial output retained: first in line when capacity
+        returns."""
+        self.tenants[req.tenant].queue.appendleft(req)
+
+    def pending(self) -> int:
+        return sum(len(t.queue) for t in self.tenants.values())
+
+    def queued(self, tenant: str) -> int:
+        t = self.tenants.get(tenant)
+        return len(t.queue) if t else 0
+
+    # -------------------------------------------------------------- pick ----
+    def _qos_factor(self, qos_name: str) -> float:
+        qos = self.qos_table.get(qos_name)
+        max_qos = max((q.priority for q in self.qos_table.values()),
+                      default=1) or 1
+        return qos.priority / max_qos if qos else 0.0
+
+    def _priority(self, tenant: Tenant) -> float:
+        """The serving multifactor: fair-share + QOS, same weights and the
+        same ``2^(-usage/shares)`` factor the batch scheduler uses."""
+        head = tenant.queue[0]
+        return (self.weights.fairshare
+                * self.tree.fair_share_factor(tenant.name)
+                + self.weights.qos * self._qos_factor(head.qos))
+
+    def _over_cap(self, tenant: Tenant, req) -> bool:
+        qos = self.qos_table.get(req.qos)
+        if qos is None or not qos.grp_tres:
+            return False
+        held = float(tenant.slots_by_qos.get(req.qos, 0))
+        return not tres_within({TRES_SLOTS: held}, {TRES_SLOTS: 1.0},
+                               qos.grp_tres)
+
+    def _best_tenant(self, eligible=None) -> Optional[Tenant]:
+        best, best_key = None, None
+        for t in self.tenants.values():
+            if not t.queue or self._over_cap(t, t.queue[0]):
+                continue
+            if eligible is not None and not eligible(t.queue[0]):
+                continue
+            key = (self._priority(t), -t.queue[0]._seq)
+            if best is None or key > best_key:
+                best, best_key = t, key
+        return best
+
+    def next_request(self):
+        """Pop the next request to admit, or None (all queues empty or
+        capped).  The caller owns the slot; the tenant's GrpTRES slot
+        hold is taken here and returned by :meth:`release`."""
+        t = self._best_tenant()
+        if t is None:
+            return None
+        req = t.queue.popleft()
+        t.slots_by_qos[req.qos] = t.slots_by_qos.get(req.qos, 0) + 1
+        return req
+
+    def release(self, req):
+        """Return the slot hold (request finished or was evicted)."""
+        t = self.tenants.get(req.tenant)
+        if t is not None:
+            t.slots_by_qos[req.qos] = max(
+                t.slots_by_qos.get(req.qos, 0) - 1, 0)
+
+    # -------------------------------------------------------- preemption ----
+    def next_preempting(self, running: list):
+        """Pop the best queued request whose QOS may evict one of
+        ``running``, and pick its victim: ``(request, victim)`` or None.
+
+        Atomic pop-and-pick so the engine admits exactly the blocked
+        request the eviction was justified by (the requeued victim lands
+        at the head of its tenant queue and must not race it back into
+        the freed slot).  Considered tenants are those whose *head* can
+        preempt something running — a blocked high request preempts even
+        when a non-preempting tenant outranks it for the next free slot.
+        The victim is the lowest-QOS running request, breaking ties
+        toward the tenant with the worst fair-share standing, then the
+        most recent admission.
+        """
+        running_qos = {r.qos for r in running}
+
+        def can_preempt_now(req) -> bool:
+            qos = self.qos_table.get(req.qos)
+            return qos is not None and any(
+                qos.can_preempt(v) for v in running_qos)
+
+        t = self._best_tenant(eligible=can_preempt_now)
+        if t is None:
+            return None
+        head = t.queue[0]
+        qos = self.qos_table[head.qos]
+        victims = [r for r in running if qos.can_preempt(r.qos)]
+
+        def vkey(r):
+            vq = self.qos_table.get(r.qos)
+            return (vq.priority if vq else 0,
+                    self.tree.fair_share_factor(r.tenant), -r._seq)
+        victim = min(victims, key=vkey)
+        t.queue.popleft()
+        t.slots_by_qos[head.qos] = t.slots_by_qos.get(head.qos, 0) + 1
+        return head, victim
+
+    # ---------------------------------------------------------- charging ----
+    def charge(self, req, tokens: int = 0, kv_tokens: int = 0) -> float:
+        """Charge generated tokens and/or KV-cache residency to the
+        request's tenant in the shared ledger (QOS usage_factor applied,
+        so scavenger tokens are discounted like scavenger job-seconds).
+
+        No decay advance: the ledger's clock is driven by whoever owns it
+        (the cluster's event loop, or ``tree.decay_to`` directly).
+        """
+        qos = self.qos_table.get(req.qos)
+        return self.tree.charge_tres(
+            req.tenant,
+            {"tokens": float(tokens), "gres/kv_token": float(kv_tokens)},
+            usage_factor=qos.usage_factor if qos else 1.0)

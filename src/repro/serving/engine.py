@@ -1,19 +1,26 @@
 """Batched decode engine: slot-based continuous batching over a shared KV
 cache (the TensorRT-role module from DESIGN.md's assumption log).
 
-A fixed number of *slots* share one batched cache pytree.  Requests queue;
-when a slot frees, the next request is prefilled (its cache slice written
-into the batch cache at the slot index) and joins the batched one-token
-decode loop.  Finished sequences (EOS or max_new_tokens) free their slot
-immediately — the engine never waits for the whole batch, which is the
-throughput property continuous batching exists for.
+A fixed number of *slots* share one batched cache pytree.  Requests queue
+behind a multi-tenant :class:`~repro.serving.admission.AdmissionController`;
+when a slot frees, the next request is chosen by the same
+``2^(-usage/shares)`` fair-share priority the batch scheduler uses, then
+prefilled (its cache slice written into the batch cache at the slot index)
+and joins the batched one-token decode loop.  Finished sequences (EOS or
+max_new_tokens) free their slot immediately — the engine never waits for
+the whole batch, which is the throughput property continuous batching
+exists for.
 
-Per-slot position bookkeeping lives host-side; the batched decode step is a
-single jitted call per token across all active slots.
+Multi-tenancy rides entirely on the host side: admission picks, GrpTRES
+slot caps, QOS preemption (a blocked high request evicts one scavenger
+slot; the victim requeues with its partial output retained and resumes
+exactly where it stopped), and per-token ledger charges are all O(tenants)
+Python per step — the batched decode step stays a single jitted call per
+token across all active slots.
 """
 from __future__ import annotations
 
-import collections
+import time
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -25,6 +32,11 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.models import init_cache, init_params, prefill
 from repro.models.model import decode_step
 from repro.monitoring import MetricsRegistry
+from repro.monitoring.metrics import (
+    METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_TENANT_ADMITTED,
+    METRIC_SERVE_TENANT_TOKENS,
+)
+from repro.serving.admission import AdmissionController
 
 
 @dataclass
@@ -34,23 +46,29 @@ class Request:
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     temperature: float = 0.0           # 0 => greedy
+    tenant: str = "default"            # account in the shared ledger
+    qos: str = "normal"                # service tier (see repro.policy.qos)
     # filled by the engine
     output: list = field(default_factory=list)
     done: bool = False
+    preemptions: int = 0               # times evicted mid-decode
+    _seq: int = field(default=0, repr=False)   # admission arrival order
 
 
 class DecodeEngine:
     def __init__(self, cfg: ModelConfig, params, num_slots: int = 8,
                  cache_len: int = 1024, run: Optional[RunConfig] = None,
-                 metrics: Optional[MetricsRegistry] = None, seed: int = 0):
+                 metrics: Optional[MetricsRegistry] = None, seed: int = 0,
+                 admission: Optional[AdmissionController] = None):
         self.cfg = cfg
         self.params = params
         self.run = run or RunConfig(remat="none")
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.metrics = metrics or MetricsRegistry()
+        self.admission = admission if admission is not None \
+            else AdmissionController()
         self.cache = init_cache(cfg, num_slots, cache_len)
-        self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.pos = np.zeros(num_slots, np.int64)       # next position per slot
         self.last_tok = np.zeros(num_slots, np.int32)
@@ -72,41 +90,96 @@ class DecodeEngine:
 
     # ------------------------------------------------------------ public ----
     def submit(self, req: Request):
+        # generation past the cache boundary truncates in _maybe_finish,
+        # which also guarantees a preemption victim's resume prefill
+        # (prompt + partial output) still fits the cache
         assert len(req.prompt) < self.cache_len, "prompt exceeds cache"
-        self.queue.append(req)
+        self.admission.submit(req)
+
+    def pending(self) -> int:
+        return self.admission.pending()
+
+    @property
+    def queue(self) -> list:
+        """Flattened view of all tenant queues (compat/diagnostics)."""
+        return [r for t in self.admission.tenants.values() for r in t.queue]
 
     def _free_slots(self):
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def _admit(self):
-        """Prefill queued requests into free slots."""
+        """Fill free slots from the admission controller; then let blocked
+        high-QOS requests preempt one preemptable slot each."""
         for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.popleft()
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-            with_timer = self.metrics.histogram(
-                "serve_prefill_seconds", "prefill latency")
-            import time
-            t0 = time.perf_counter()
+            req = self.admission.next_request()
+            if req is None:
+                return
+            self._prefill_into(slot, req)
+        # QOS preemption: each blocked preempting request evicts exactly
+        # one victim slot (bounded per pass against cyclic QOS tables)
+        for _ in range(self.num_slots):
+            running = [r for r in self.slots if r is not None]
+            pick = self.admission.next_preempting(running)
+            if pick is None:
+                return
+            req, victim = pick
+            slot = self._evict(victim)
+            self._prefill_into(slot, req)
+
+    def _prefill_into(self, slot: int, req: Request):
+        """Prefill a request into a free slot.  A preempted request
+        resumes: its prompt *and* retained partial output are prefilled,
+        so decode continues from exactly where the eviction stopped."""
+        if req.output:
+            toks = np.concatenate(
+                [req.prompt, np.asarray(req.output[:-1], np.int32)])
+        else:
+            toks = req.prompt
+        prompt = jnp.asarray(toks, jnp.int32)[None]
+        with_timer = self.metrics.histogram(
+            "serve_prefill_seconds", "prefill latency")
+        t0 = time.perf_counter()
+        try:
             logits, cache1 = prefill(
                 self.params, {"tokens": prompt}, self.cfg, self.run,
                 cache_len=self.cache_len)
+        finally:
             with_timer.observe(time.perf_counter() - t0)
-            # write this request's cache slice into the batch cache
-            def put(batch_leaf, one_leaf):
-                return jax.lax.dynamic_update_slice_in_dim(
-                    batch_leaf, one_leaf.astype(batch_leaf.dtype), slot,
-                    axis=1)
-            self.cache = jax.tree.map(put, self.cache, cache1)
+        # write this request's cache slice into the batch cache
+        def put(batch_leaf, one_leaf):
+            return jax.lax.dynamic_update_slice_in_dim(
+                batch_leaf, one_leaf.astype(batch_leaf.dtype), slot,
+                axis=1)
+        self.cache = jax.tree.map(put, self.cache, cache1)
+        if req.output:
+            tok = int(req.output[-1])      # resume: last token re-decodes
+        else:
             tok = int(jnp.argmax(logits[0, -1]))
             req.output.append(tok)
-            self.slots[slot] = req
-            self.pos[slot] = len(req.prompt)
-            self.last_tok[slot] = tok
-            self.remaining[slot] = req.max_new_tokens - 1
-            self.metrics.counter("serve_requests_admitted").inc()
-            self._maybe_finish(slot)
+        self.slots[slot] = req
+        self.pos[slot] = len(toks)
+        self.last_tok[slot] = tok
+        self.remaining[slot] = req.max_new_tokens - len(req.output)
+        # the prefilled KV lines are residency the tenant pays for
+        self.admission.charge(req, kv_tokens=len(toks))
+        self.metrics.counter("serve_requests_admitted").inc()
+        self.metrics.counter(
+            METRIC_SERVE_TENANT_ADMITTED,
+            "admissions per tenant").inc(tenant=req.tenant)
+        self._maybe_finish(slot)
+
+    def _evict(self, victim: Request) -> int:
+        """Evict a running request from its slot; it requeues at the head
+        of its tenant queue with partial output retained.  Returns the
+        freed slot index."""
+        slot = self.slots.index(victim)
+        self.slots[slot] = None
+        victim.preemptions += 1
+        self.admission.release(victim)
+        self.admission.requeue(victim)
+        self.metrics.counter(
+            METRIC_SERVE_PREEMPTIONS, "evicted decode slots").inc()
+        return slot
 
     def _maybe_finish(self, slot: int):
         req = self.slots[slot]
@@ -117,6 +190,7 @@ class DecodeEngine:
                 or self.pos[slot] >= self.cache_len - 1:
             req.done = True
             self.slots[slot] = None
+            self.admission.release(req)
             self.metrics.counter("serve_requests_completed").inc()
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
@@ -134,31 +208,39 @@ class DecodeEngine:
         return np.where(temps > 0, sampled, greedy).astype(np.int32)
 
     def step(self) -> int:
-        """Admit + one batched decode token.  Returns #active slots."""
+        """Admit + one batched decode token.  Returns #active + #queued."""
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
-            return 0
+            return self.admission.pending()
         token = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos.astype(np.int32))
-        import time
         t0 = time.perf_counter()
         logits, self.cache = self._step(self.params, self.cache, token, pos)
         self.metrics.histogram("serve_decode_seconds",
                                "batched decode-step latency").observe(
             time.perf_counter() - t0)
         nxt = self._sample(logits)
+        tenant_tokens: dict[str, int] = {}
         for i in active:
             req = self.slots[i]
             req.output.append(int(nxt[i]))
             self.pos[i] += 1
             self.last_tok[i] = nxt[i]
             self.remaining[i] -= 1
+            # one generated token + rent on the KV lines this slot holds
+            self.admission.charge(req, tokens=1, kv_tokens=int(self.pos[i]))
+            tenant_tokens[req.tenant] = tenant_tokens.get(req.tenant, 0) + 1
             self._maybe_finish(i)
         self.metrics.counter("serve_tokens_generated").inc(len(active))
-        return len([r for r in self.slots if r is not None]) + len(self.queue)
+        tok_counter = self.metrics.counter(
+            METRIC_SERVE_TENANT_TOKENS, "generated tokens per tenant")
+        for tenant, n in tenant_tokens.items():
+            tok_counter.inc(n, tenant=tenant)
+        return (len([r for r in self.slots if r is not None])
+                + self.admission.pending())
 
     def run_to_completion(self, max_steps: int = 10_000):
         for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
+            if self.step() == 0:
                 break

@@ -1,0 +1,313 @@
+"""Multi-tenant serving: the shared tenancy core driving admission.
+
+The acceptance properties of the shared policy layer:
+
+* `repro.policy` is engine-agnostic — no imports from `repro.cluster` or
+  `repro.serving`, and the `cluster.fairshare`/`cluster.qos` shims
+  re-export the same objects;
+* two tenants with 10:1 shares under sustained load converge to a
+  10:1 ± 15% generated-token ratio;
+* QOS preemption evicts exactly one scavenger slot per blocked high
+  request, and the victim resumes with its partial output retained;
+* batch and serving usage land in the one shared ledger (`sshare`
+  reflects both).
+"""
+import itertools
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import init_params
+from repro.monitoring import MetricsRegistry
+from repro.monitoring.metrics import (
+    METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_TENANT_TOKENS,
+)
+from repro.policy import FairShareTree, QOS, default_qos_table
+from repro.serving import AdmissionController, DecodeEngine, Request
+
+
+def _req(rid, tenant="default", qos="normal", plen=8, max_new=4, vocab=32,
+         seed=None):
+    rng = np.random.default_rng(rid if seed is None else seed)
+    return Request(rid=rid, prompt=rng.integers(0, vocab, plen).astype(
+        np.int32), max_new_tokens=max_new, tenant=tenant, qos=qos)
+
+
+# -------------------------------------------------------- package layering ----
+
+def test_policy_package_is_engine_agnostic():
+    """Dependency arrow points inward only: repro.policy must not import
+    the execution engines it serves."""
+    import re
+
+    import repro.policy
+    pkg = pathlib.Path(repro.policy.__file__).parent
+    forbidden = re.compile(
+        r"^\s*(?:from\s+repro\.(?:cluster|serving)\b"
+        r"|import\s+repro\.(?:cluster|serving)\b)", re.M)
+    for src_file in sorted(pkg.glob("*.py")):
+        hit = forbidden.search(src_file.read_text())
+        assert hit is None, (src_file, hit and hit.group(0))
+
+
+def test_cluster_shims_reexport_policy():
+    """PR-1 import paths keep working and alias the policy objects."""
+    import repro.policy as P
+    from repro.cluster import fairshare as shim_fs
+    from repro.cluster import qos as shim_qos
+    assert shim_fs.FairShareTree is P.FairShareTree
+    assert shim_fs.MultifactorPriority is P.MultifactorPriority
+    assert shim_fs.PriorityWeights is P.PriorityWeights
+    assert shim_fs.DEFAULT_TRES_WEIGHTS is P.DEFAULT_TRES_WEIGHTS
+    assert shim_qos.QOS is P.QOS
+    assert shim_qos.default_qos_table is P.default_qos_table
+    assert shim_qos.job_tres is P.job_tres
+
+
+# ---------------------------------------------------- admission controller ----
+
+def test_admission_fifo_within_tenant_and_auto_register():
+    ctrl = AdmissionController()
+    a1, a2 = _req(1, tenant="newbie"), _req(2, tenant="newbie")
+    ctrl.submit(a1)
+    ctrl.submit(a2)
+    assert "newbie" in ctrl.tenants            # lenient auto-association
+    assert "newbie" in ctrl.tree.accounts      # and in the shared ledger
+    assert ctrl.next_request() is a1
+    assert ctrl.next_request() is a2
+    assert ctrl.next_request() is None
+
+
+def test_grp_tres_slot_cap_holds_tenant():
+    """A QOS GrpTRES cap of 1 slot keeps a tenant to one concurrent
+    decode slot no matter how deep its queue is."""
+    table = default_qos_table()
+    table["normal"] = QOS("normal", priority=500, grp_tres={"slots": 1})
+    ctrl = AdmissionController(qos_table=table)
+    reqs = [_req(i, tenant="capped") for i in range(3)]
+    for r in reqs:
+        ctrl.submit(r)
+    assert ctrl.next_request() is reqs[0]
+    assert ctrl.next_request() is None         # at the cap, queue non-empty
+    assert ctrl.pending() == 2
+    ctrl.release(reqs[0])
+    assert ctrl.next_request() is reqs[1]
+
+
+def test_slot_cap_is_per_qos_like_batch_grp_tres():
+    """GrpTRES caps are per-(account, QOS): slots held through `high` must
+    not count against the same tenant's `scavenger` cap."""
+    table = default_qos_table()
+    table["scavenger"] = QOS("scavenger", priority=0,
+                             grp_tres={"slots": 1})
+    ctrl = AdmissionController(qos_table=table)
+    highs = [_req(i, tenant="t", qos="high") for i in range(2)]
+    scav = _req(2, tenant="t", qos="scavenger")
+    for r in highs:
+        ctrl.submit(r)
+    ctrl.submit(scav)
+    assert ctrl.next_request() is highs[0]     # high is uncapped
+    assert ctrl.next_request() is highs[1]
+    assert ctrl.next_request() is scav         # 2 high slots held, 0 scav
+
+
+def test_blocked_high_preempts_even_from_low_fairshare_tenant():
+    """A hog tenant's high request must still preempt scavenger slots even
+    when a fresher tenant (whose head cannot preempt) outranks it for the
+    next free slot."""
+    ctrl = AdmissionController()
+    ctrl.add_tenant("hog", shares=1)
+    ctrl.add_tenant("fresh", shares=1)
+    ctrl.tree.charge_tres("hog", {"tokens": 1000.0})   # hog's standing sinks
+    running = [_req(0, tenant="third", qos="scavenger"),
+               _req(1, tenant="third", qos="scavenger")]
+    hi = _req(2, tenant="hog", qos="high")
+    ctrl.submit(hi)
+    ctrl.submit(_req(3, tenant="fresh", qos="scavenger"))
+    # fresh outranks hog for a free slot, but its head can't preempt
+    pick = ctrl.next_preempting(running)
+    assert pick is not None
+    req, victim = pick
+    assert req is hi and victim in running
+
+
+def test_admission_fairshare_converges_10_to_1():
+    """The acceptance criterion: 10:1 shares under sustained saturating
+    load from both tenants -> generated tokens converge to 10:1 ± 15%."""
+    ctrl = AdmissionController()
+    ctrl.add_tenant("big", shares=10)
+    ctrl.add_tenant("small", shares=1)
+    num_slots, max_new = 4, 4
+    slots = [None] * num_slots
+    tokens = {"big": 0, "small": 0}
+    rid = itertools.count()
+
+    def refill():
+        for tenant in ("big", "small"):
+            while ctrl.queued(tenant) < 4:
+                ctrl.submit(_req(next(rid), tenant=tenant, max_new=max_new))
+
+    refill()
+    for _ in range(2000):
+        for i in range(num_slots):
+            if slots[i] is None:
+                req = ctrl.next_request()
+                if req is None:
+                    break
+                slots[i] = req
+                ctrl.charge(req, kv_tokens=len(req.prompt))   # prefill rent
+        for i in range(num_slots):
+            req = slots[i]
+            if req is None:
+                continue
+            req.output.append(0)
+            tokens[req.tenant] += 1
+            ctrl.charge(req, tokens=1,
+                        kv_tokens=len(req.prompt) + len(req.output))
+            if len(req.output) >= req.max_new_tokens:
+                slots[i] = None
+                ctrl.release(req)
+        refill()
+    ratio = tokens["big"] / tokens["small"]
+    assert 10 / 1.15 <= ratio <= 10 * 1.15, (ratio, tokens)
+
+
+# ------------------------------------------------------- engine integration ----
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_reduced_config("stablelm-3b")
+    return cfg, init_params(cfg, 0)
+
+
+def test_qos_preemption_evicts_exactly_one_scavenger(tiny_model):
+    """One blocked high request -> exactly one scavenger slot evicted; the
+    victim requeues with its partial output retained and finishes with the
+    same tokens an uninterrupted run produces."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(3)]
+
+    ctrl = AdmissionController()
+    ctrl.add_tenant("research", shares=1)
+    ctrl.add_tenant("prod", shares=10)
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       admission=ctrl)
+    scavs = [Request(rid=i, prompt=prompts[i], max_new_tokens=16,
+                     tenant="research", qos="scavenger") for i in range(2)]
+    for r in scavs:
+        eng.submit(r)
+    for _ in range(4):                         # both running, some progress
+        eng.step()
+    assert all(len(r.output) >= 4 and not r.done for r in scavs)
+    partial = {r.rid: list(r.output) for r in scavs}
+
+    hi = Request(rid=2, prompt=prompts[2], max_new_tokens=4,
+                 tenant="prod", qos="high")
+    eng.submit(hi)
+    eng.step()
+    assert eng.metrics.counter(METRIC_SERVE_PREEMPTIONS).value() == 1
+    evicted = [r for r in scavs if r.preemptions == 1]
+    assert len(evicted) == 1                   # exactly one slot, not both
+    victim = evicted[0]
+    assert not victim.done
+    assert victim.output[:len(partial[victim.rid])] == partial[victim.rid]
+
+    eng.run_to_completion()
+    assert hi.done and all(r.done for r in scavs)
+    assert len(victim.output) == 16
+
+    # resume correctness: the interrupted run must equal a solo greedy run
+    solo = Request(rid=9, prompt=victim.prompt, max_new_tokens=16)
+    ref = DecodeEngine(cfg, params, num_slots=1, cache_len=64)
+    ref.submit(solo)
+    ref.run_to_completion()
+    assert victim.output == solo.output
+
+
+def test_two_blocked_high_requests_evict_two_scavengers(tiny_model):
+    cfg, params = tiny_model
+    rng = np.random.default_rng(8)
+    ctrl = AdmissionController()
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       admission=ctrl)
+    scavs = [Request(rid=i,
+                     prompt=rng.integers(0, cfg.vocab_size, 6).astype(
+                         np.int32),
+                     max_new_tokens=12, tenant="research", qos="scavenger")
+             for i in range(2)]
+    for r in scavs:
+        eng.submit(r)
+    eng.step()
+    highs = [Request(rid=10 + i,
+                     prompt=rng.integers(0, cfg.vocab_size, 6).astype(
+                         np.int32),
+                     max_new_tokens=3, tenant="prod", qos="high")
+             for i in range(2)]
+    for r in highs:
+        eng.submit(r)
+    eng.step()
+    assert eng.metrics.counter(METRIC_SERVE_PREEMPTIONS).value() == 2
+    assert sorted(r.preemptions for r in scavs) == [1, 1]
+    eng.run_to_completion()
+    assert all(r.done for r in scavs + highs)
+
+
+def test_batch_and_serving_share_one_ledger(tiny_model):
+    """A tenant's batch jobs and served tokens charge the same account in
+    the same tree — one sshare call reports both."""
+    from repro.cluster import (
+        Cluster, Node, Partition, ResourceRequest, commands,
+    )
+    cfg, params = tiny_model
+    tree = FairShareTree()
+    nodes = [Node(name="n00", cpus=16, mem_mb=65536, gres={"tpu": 4},
+                  coord=(0, 0))]
+    cluster = Cluster(nodes, [Partition(name="p", nodes=("n00",),
+                                        default=True)], fairshare=tree)
+    tree.add_account("team", shares=4)
+    cluster.submit("batch", ResourceRequest(nodes=1, gres_per_node={"tpu": 4},
+                                            time_limit_s=3600),
+                   account="team", run_time_s=100.0)
+    cluster.run()
+    batch_usage = tree.usage["team"]
+    assert batch_usage > 0
+
+    ctrl = AdmissionController(tree=tree)      # same ledger, same account
+    ctrl.add_tenant("team", shares=4)
+    eng = DecodeEngine(cfg, params, num_slots=1, cache_len=64,
+                       admission=ctrl)
+    eng.submit(_req(0, tenant="team", plen=8, max_new=6,
+                    vocab=cfg.vocab_size))
+    eng.run_to_completion()
+    combined = tree.usage["team"]
+    assert combined > batch_usage              # serving charged on top
+
+    out = commands.sshare(cluster)
+    team_row = next(ln for ln in out.splitlines() if "team" in ln)
+    assert f"{combined:.0f}" in team_row       # sshare reflects both
+
+
+def test_per_tenant_serve_metrics_exported(tiny_model):
+    cfg, params = tiny_model
+    metrics = MetricsRegistry()
+    ctrl = AdmissionController()
+    ctrl.add_tenant("alice", shares=8)
+    ctrl.add_tenant("bob", shares=1)
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       metrics=metrics, admission=ctrl)
+    for i, tenant in enumerate(["alice", "bob"]):
+        eng.submit(_req(i, tenant=tenant, plen=6, max_new=3,
+                        vocab=cfg.vocab_size))
+    eng.run_to_completion()
+    # decode-step tokens (the prefill-produced first token is not counted,
+    # matching the unlabeled serve_tokens_generated series)
+    tok = metrics.counter(METRIC_SERVE_TENANT_TOKENS)
+    assert tok.value(tenant="alice") == 2
+    assert tok.value(tenant="bob") == 2
+    text = metrics.expose()
+    assert 'serve_tenant_tokens_generated{tenant="alice"}' in text
+    assert 'serve_tenant_requests_admitted{tenant="bob"}' in text
