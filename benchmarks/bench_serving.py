@@ -1,5 +1,7 @@
-"""Serving benchmarks: batched-decode throughput scaling with slot count
-(the continuous-batching claim), and prefill latency vs prompt length."""
+"""Serving benchmarks: device-resident fused decode vs the per-token host
+loop (the fast-path claim), batched-decode throughput scaling with slot
+count (the continuous-batching claim), bucketed-prefill compile counts,
+and prefill latency vs prompt length."""
 from __future__ import annotations
 
 import time
@@ -11,29 +13,76 @@ from repro.models import init_params
 from repro.serving import DecodeEngine, Request
 
 
+def _throughput(cfg, params, slots: int, **engine_kw):
+    """Returns (tokens/sec, wall seconds) for 8 requests x 16 new tokens."""
+    rng = np.random.default_rng(0)
+    eng = DecodeEngine(cfg, params, num_slots=slots, cache_len=128,
+                       **engine_kw)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 16).astype(
+                        np.int32), max_new_tokens=16)
+            for i in range(8)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                          # absorb compile time
+    warm = int(eng.metrics.counter("serve_tokens_generated").value())
+    t0 = time.perf_counter()
+    eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    # count only tokens generated inside the timed window (the fused
+    # warm-up step emits a whole chunk, so including it would flatter
+    # the fused numbers)
+    toks = int(eng.metrics.counter("serve_tokens_generated").value()) - warm
+    return toks / dt, dt
+
+
 def bench_decode_throughput(results: list):
+    """Host loop vs fused chunk at 1 and 4 slots.  Claims asserted:
+    batching scales (4 slots > 1.3x 1 slot on the host path) and the
+    device-resident fast path is >= 2x the per-token host loop at 4
+    slots."""
     cfg = get_reduced_config("stablelm-3b")
     params = init_params(cfg, 0)
-    rng = np.random.default_rng(0)
-    out = {}
+    host, fused = {}, {}
     for slots in (1, 4):
-        eng = DecodeEngine(cfg, params, num_slots=slots, cache_len=128)
-        reqs = [Request(rid=i,
-                        prompt=rng.integers(0, cfg.vocab_size, 16).astype(
-                            np.int32), max_new_tokens=16)
-                for i in range(8)]
-        for r in reqs:
-            eng.submit(r)
-        eng.step()                      # absorb compile time
-        t0 = time.perf_counter()
-        eng.run_to_completion()
-        dt = time.perf_counter() - t0
-        toks = int(eng.metrics.counter("serve_tokens_generated").value())
-        out[slots] = toks / dt
+        host[slots], dt = _throughput(cfg, params, slots, fused=False)
         results.append((f"decode_throughput_slots{slots}", dt * 1e6,
-                        f"{toks / dt:,.0f} tok/s"))
-    # batching must help
-    assert out[4] > out[1] * 1.3, out
+                        f"{host[slots]:,.0f} tok/s host loop"))
+    for slots in (1, 4):
+        fused[slots], dt = _throughput(cfg, params, slots, decode_chunk=8,
+                                       prefill_buckets="auto")
+        results.append((f"decode_throughput_fused_slots{slots}", dt * 1e6,
+                        f"{fused[slots]:,.0f} tok/s fused chunk=8 "
+                        f"({fused[slots] / host[slots]:.1f}x host)"))
+    # batching must help, and the fused path must beat per-token dispatch
+    assert host[4] > host[1] * 1.3, (host, fused)
+    assert fused[4] >= host[4] * 2.0, (host, fused)
+
+
+def bench_prefill_bucketed(results: list):
+    """Mixed prompt lengths through bucketed prefill: compilations are
+    bounded by the bucket count, not the number of distinct lengths."""
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(2)
+    eng = DecodeEngine(cfg, params, num_slots=4, cache_len=128,
+                       decode_chunk=8, prefill_buckets="auto")
+    lengths = [int(p) for p in rng.integers(4, 100, 20)]
+    t0 = time.perf_counter()
+    for i, plen in enumerate(lengths):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(
+                np.int32), max_new_tokens=2))
+    eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    compiles = eng.prefill_compilations()
+    buckets = eng.prefill_buckets
+    results.append(("prefill_bucketed", dt * 1e6,
+                    f"{compiles} prefill compiles for {len(lengths)} "
+                    f"prompts ({len(set(lengths))} distinct lengths, "
+                    f"{len(buckets)} buckets)"))
+    assert compiles <= len(buckets), (compiles, buckets)
 
 
 def bench_prefill_latency(results: list):
@@ -62,4 +111,5 @@ def bench_prefill_latency(results: list):
 
 def run(results: list):
     bench_decode_throughput(results)
+    bench_prefill_bucketed(results)
     bench_prefill_latency(results)

@@ -21,6 +21,8 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: scheduler parallelism serving kernels "
                          "roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as a JSON artifact")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -47,6 +49,13 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     for name, us, derived in results:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump([{"name": name, "us_per_call": round(us, 1),
+                        "derived": derived}
+                       for name, us, derived in results], f, indent=2)
+        print(f"[wrote {args.json}]", file=sys.stderr)
     print(f"\n{len(results)} benchmarks in "
           f"{time.perf_counter() - t0:.1f}s", file=sys.stderr)
     return 0

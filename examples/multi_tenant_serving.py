@@ -13,6 +13,15 @@ admission in the continuous-batching engine:
   ``high`` request from prod evicts one of its slots; the victim requeues
   with its partial output retained and resumes where it stopped.
 
+The engine runs the device-resident fast path (``decode_chunk=4``): each
+``engine.step()`` below generates FOUR tokens per slot in one jitted
+dispatch, with sampling and stop handling fused on device.  Tenancy
+semantics are unchanged — admission, ledger charges (batched per chunk),
+and QOS preemption happen at chunk boundaries, so the blocked ``high``
+request below waits at most one chunk before evicting its victim.  See
+README "Serving fast path" for decode-chunk semantics and the prefill
+bucket table.
+
 Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
 """
 import numpy as np
@@ -36,7 +45,8 @@ def main():
     admission.add_tenant("prod", shares=8)
     admission.add_tenant("research", shares=1)
     engine = DecodeEngine(cfg, params, num_slots=2, cache_len=128,
-                          metrics=metrics, admission=admission)
+                          metrics=metrics, admission=admission,
+                          decode_chunk=4, prefill_buckets="auto")
 
     rng = np.random.default_rng(0)
 

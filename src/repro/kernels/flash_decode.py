@@ -1,0 +1,127 @@
+"""Pallas TPU flash-decode: single-query attention against a long KV cache.
+
+Decode is the inverse regime of prefill: ONE query per sequence, thousands
+of KV lines.  The prefill kernel's q-block grid collapses to a single row,
+so the parallelism has to come from the KV axis instead — the classic
+*split-KV* flash-decode trick:
+
+  * the KV sequence is split into ``block_k`` chunks across the grid; each
+    grid cell computes an **online-softmax partial** over its chunk — the
+    unnormalized accumulator ``acc = exp(s - m) @ v``, the chunk max ``m``
+    and the chunk sum ``l`` — entirely in VMEM;
+  * a cheap **cross-block combine** (O(num_chunks), pure jnp in the
+    wrapper) rescales the partials to the global max and normalizes:
+    ``out = Σ acc_c·exp(m_c - m*) / Σ l_c·exp(m_c - m*)``.
+
+Chunks are independent, so nothing is carried across grid cells — on
+hardware with a parallel KV grid dimension every chunk runs concurrently,
+which is what keeps decode latency flat as the cache grows.
+
+GQA-aware like ``flash_attention.py``: the grid iterates KV heads and each
+cell processes all G query heads sharing that KV head as one (G, Dh)
+block — the KV chunk is fetched from HBM once per group, not once per
+query head.
+
+Validity is a per-sequence position: the cache holds ``S`` slots of which
+``[0, pos_b]`` are live (the serving engine's non-ring full cache — slot i
+holds absolute position i).  ``pos`` rides in as a scalar-prefetch operand
+so the mask is computed from SMEM, not HBM.
+
+Layout contract (from ops.py): q (B, K, G, Dh) grouped queries;
+k/v (B, K, S, Dh); pos (B,) int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+_NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                   block_k: int, scale: float):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    pos = pos_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bk, Dh)
+    G = q.shape[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (G, bk)
+    kv_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (G, block_k), 1)
+    mask = kv_pos <= pos
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m = jnp.max(s, axis=-1)                           # (G,)
+    p = jnp.exp(s - m[:, None])
+    p = jnp.where(mask, p, 0.0)                       # fully-masked chunk: 0
+    l = jnp.sum(p, axis=-1)                           # (G,)
+    acc = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (G, Dh)
+
+    o_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_bkgd(q, k, v, pos, *, block_k: int = DEFAULT_BLOCK_K,
+                      interpret: bool = False):
+    """q: (B, K, G, Dh); k/v: (B, K, S, Dh); pos: (B,) int32 — each
+    sequence attends kv slots [0, pos_b].  Returns (B, K, G, Dh)."""
+    B, K, G, Dh = q.shape
+    S = k.shape[2]
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+    scale = Dh ** -0.5
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale)
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, K, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, Dh),
+                             lambda b, h, ki, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, Dh),
+                             lambda b, h, ki, pos: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, block_k, Dh),
+                             lambda b, h, ki, pos: (b, h, ki, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, G, Dh),
+                             lambda b, h, ki, pos: (b, h, ki, 0, 0)),
+                pl.BlockSpec((1, 1, 1, G),
+                             lambda b, h, ki, pos: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, 1, G),
+                             lambda b, h, ki, pos: (b, h, ki, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, nk, G, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, nk, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, nk, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q, k, v)
+
+    # cross-block combine: rescale every chunk's partial to the global max
+    m_star = jnp.max(m_part, axis=2, keepdims=True)          # (B, K, 1, G)
+    w = jnp.exp(m_part - m_star)                             # (B, K, nk, G)
+    num = jnp.sum(o_part * w[..., None], axis=2)             # (B, K, G, Dh)
+    den = jnp.sum(l_part * w, axis=2)                        # (B, K, G)
+    den = jnp.where(den == 0.0, 1.0, den)
+    return (num / den[..., None]).astype(q.dtype)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_decode import flash_decode_bkgd
 from repro.kernels.ssd_scan import ssd_scan_bhsp
 
 
@@ -41,6 +42,27 @@ def flash_attention(q, k, v, window=None, block_q: int = 512,
     o = flash_attention_bhsd(qt, kt, vt, window=window, block_q=bq,
                              block_k=bk, interpret=interpret)
     return o.transpose(0, 2, 1, 3)
+
+
+def flash_decode(q, k, v, pos, block_k: int = 512, interpret=None):
+    """Model-layout wrapper for single-query decode attention.
+
+    q: (B, 1, H, Dh) roped query; k/v: (B, S, K, Dh) KV cache (slot i =
+    absolute position i, H % K == 0); pos: (B,) int32 — attends slots
+    [0, pos_b].  Returns (B, 1, H, Dh).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    B, _, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    S = k.shape[1]
+    bk = _pick_block(S, block_k)
+    qg = q[:, 0].reshape(B, K, G, Dh)                # grouped like the model
+    kt = k.transpose(0, 2, 1, 3)                     # (B, K, S, Dh)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_decode_bkgd(qg, kt, vt, pos, block_k=bk, interpret=interpret)
+    return o.reshape(B, H, Dh)[:, None]
 
 
 def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 256, interpret=None):

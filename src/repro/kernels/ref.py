@@ -33,6 +33,27 @@ def attention_ref(q, k, v, window=None):
     return o.astype(q.dtype)
 
 
+def decode_attention_ref(q, k, v, pos):
+    """Naive single-query decode attention (the flash-decode oracle).
+
+    q: (B,1,H,Dh); k/v: (B,S,K,Dh) with H % K == 0 (slot i holds absolute
+    position i); pos: (B,) int32 — sequence b attends slots [0, pos_b].
+    fp32 softmax.
+    """
+    B, S, K, Dh = k.shape
+    H = q.shape[2]
+    G = H // K
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * (Dh ** -0.5)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]           # (B, S)
+    logits = jnp.where(valid[:, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def ssd_ref(x, dt, A, Bm, Cm):
     """Naive sequential SSD recurrence (token-by-token, exact).
 

@@ -37,6 +37,17 @@ def parse_tenants(spec: str, shares: str = "") -> dict[str, int]:
     return out
 
 
+def parse_buckets(spec: str):
+    """``auto`` -> power-of-two buckets, ``off`` -> exact-length prefill,
+    ``32,64,128`` -> explicit bucket lengths."""
+    spec = spec.strip().lower()
+    if spec in ("", "off", "none"):
+        return None
+    if spec == "auto":
+        return "auto"
+    return tuple(int(p) for p in spec.split(",") if p.strip())
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--arch", default="stablelm-3b", choices=ARCH_IDS)
@@ -46,6 +57,15 @@ def main(argv=None) -> int:
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="tokens generated per device dispatch (the fused "
+                         "decode_n scan length); 1 = per-token chunks")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="use the legacy per-token host sampling loop")
+    ap.add_argument("--prefill-buckets", default="auto",
+                    help="'auto' (power-of-two), 'off', or comma lengths "
+                         "e.g. 32,64,128 — prompts pad to the next bucket "
+                         "so prefill compiles once per bucket")
     ap.add_argument("--tenants", default="",
                     help="tenant:shares list, e.g. alice:8,bob:1 "
                          "(empty: single default tenant)")
@@ -65,7 +85,10 @@ def main(argv=None) -> int:
         admission.add_tenant(name, shares=share)
     engine = DecodeEngine(cfg, params, num_slots=args.slots,
                           cache_len=args.cache_len, metrics=metrics,
-                          admission=admission)
+                          admission=admission,
+                          decode_chunk=args.decode_chunk,
+                          fused=not args.no_fused,
+                          prefill_buckets=parse_buckets(args.prefill_buckets))
     rng = np.random.default_rng(args.seed)
     names = list(tenants)
     for rid in range(args.requests):
@@ -80,8 +103,13 @@ def main(argv=None) -> int:
     engine.run_to_completion()
     wall = time.perf_counter() - t0
     total = int(metrics.counter("serve_tokens_generated").value())
+    mode = ("host loop" if args.no_fused
+            else f"fused chunk={args.decode_chunk}")
     print(f"served {args.requests} requests, {total} tokens in {wall:.1f}s "
-          f"({total / wall:,.1f} tok/s, {args.slots} slots)")
+          f"({total / wall:,.1f} tok/s, {args.slots} slots, {mode})")
+    if engine.prefill_buckets:
+        print(f"prefill buckets {engine.prefill_buckets}: "
+              f"{engine.prefill_compilations()} compilations")
     if len(names) > 1 and total:
         tok = metrics.counter(METRIC_SERVE_TENANT_TOKENS)
         parts = []

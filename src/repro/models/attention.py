@@ -179,8 +179,9 @@ def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, n_groups: int,
     if abstract:
         arr = jax.ShapeDtypeStruct(shape, dtype)
         return {"k": arr, "v": arr}
-    z = jnp.zeros(shape, dtype)
-    return {"k": z, "v": z}
+    # distinct buffers: the serving engine donates the cache pytree into
+    # jitted steps, and XLA rejects donating one buffer twice
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def attention_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
@@ -219,11 +220,16 @@ def attention_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
 
 
 def attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
-                     cfg: ModelConfig):
+                     cfg: ModelConfig, use_pallas: bool = False):
     """One-token decode.  x: (B,1,d); cache k/v: (B, slots, K, Dh);
     pos: scalar int32 OR (B,) int32 — absolute position of each new token
     (0-based).  Per-slot positions support continuous batching (each slot
     of the serving engine decodes at its own depth).
+
+    ``use_pallas`` routes the attention through the split-KV flash-decode
+    kernel (``repro.kernels.flash_decode``) when the cache layout allows
+    it — full cache, no sliding-window ring, so slot i holds absolute
+    position i; the windowed ring stays on the reference path.
 
     Returns (out (B,1,d), updated cache).
     """
@@ -238,6 +244,11 @@ def attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     bidx = jnp.arange(B)
     ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
     cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+
+    if use_pallas and cfg.sliding_window is None:
+        from repro.kernels import ops as kops
+        o = kops.flash_decode(q, ck, cv, posv)
+        return out_proj(p, constrain(o, "heads")), {"k": ck, "v": cv}
 
     H, Dh = q.shape[2], q.shape[3]
     K = ck.shape[2]

@@ -5,6 +5,9 @@ Entry points (all pure functions of (params, batch/cache)):
   * ``loss_fn(params, batch, cfg, run)``        -> (loss, metrics)
   * ``prefill(params, batch, cfg, run)``        -> (logits, cache)
   * ``decode_step(params, cache, token, pos, cfg, run)`` -> (logits, cache)
+  * ``decode_n(params, cache, token, pos, ...)`` -> N tokens per dispatch
+    (``lax.scan`` over ``decode_step`` with fused sampling and device-side
+    per-slot stop masking — the serving engine's device-resident fast path)
 
 Layers run as a ``lax.scan`` over stacked layer groups (period P =
 lcm(attn_every, moe.every)); compile time is flat in depth.  Remat policy
@@ -201,8 +204,17 @@ def cache_logical_axes(cfg: ModelConfig):
 # ---------------------------------------------------------------- prefill ----
 
 def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,
-            cache_len: Optional[int] = None):
-    """Run the full prompt, return (last-position logits, populated cache)."""
+            cache_len: Optional[int] = None,
+            last_pos: Optional[jax.Array] = None):
+    """Run the full prompt, return (last-position logits, populated cache).
+
+    ``last_pos`` (traced scalar int32, optional) selects which position's
+    logits to return instead of the literal last one.  Bucketed prefill
+    pads prompts up to a power-of-two length L and passes ``P - 1`` here:
+    causal masking guarantees positions < P never attend the pad tail, so
+    the logits at P-1 are exactly the unpadded prompt's (the pad KV lines
+    written past P-1 stay masked at decode time until overwritten).
+    """
     P = group_period(cfg)
     sched = layer_schedule(cfg)[:P]
     h = build_hidden(params, batch, cfg)
@@ -247,7 +259,11 @@ def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,
     else:
         h, caches = jax.lax.scan(group_body, h, tuple(params["layers"]))
     h = rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
-    logits = unembed(params, h[:, -1:], cfg)
+    if last_pos is None:
+        h_last = h[:, -1:]
+    else:
+        h_last = jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
+    logits = unembed(params, h_last, cfg)
     return logits, {"layers": list(caches)}
 
 
@@ -274,7 +290,8 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig, run: RunConfig):
             hh = rmsnorm(x, p["norm1"]["scale"], cfg.norm_eps)
             if mixer == "attn":
                 hh, c = A.attention_decode(p["attn"], hh, group_cache[i],
-                                           pos, cfg)
+                                           pos, cfg,
+                                           use_pallas=run.use_pallas)
             else:
                 hh, c = SSM.ssm_decode(p["ssm"], hh, group_cache[i], cfg)
             x = constrain(x + hh, "hidden")
@@ -303,3 +320,74 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig, run: RunConfig):
     h = rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
     logits = unembed(params, h, cfg)
     return logits, {"layers": list(new_layers)}
+
+
+# ------------------------------------------------- fused decode fast path ----
+
+#: token emitted by finished slots inside a decode_n chunk (host drops them)
+PAD_TOKEN_ID = 0
+
+
+def sample_tokens(key, logits, temps):
+    """Fused per-slot sampling on device.  logits: (B, V); temps: (B,)
+    (0 => greedy).  Splits ``key`` exactly like the host sampler did
+    (``categorical`` on ``logits / max(t, 1e-4)``), so host and fused
+    paths are bit-identical given the same key stream."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temps, 1e-4)[:, None]
+    sampled = jax.random.categorical(
+        key, logits.astype(jnp.float32) / t, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+def decode_n(params, cache, token, pos, remaining, done, eos, temps, key,
+             cfg: ModelConfig, run: RunConfig, num_tokens: int,
+             cache_len: int):
+    """Generate up to ``num_tokens`` tokens per slot in ONE dispatch.
+
+    A ``lax.scan`` over ``decode_step`` with sampling and stop handling
+    fused on device, so the host syncs (and pays a dispatch) once per
+    chunk instead of once per token:
+
+      * sampling — per-slot temperature vector, PRNG key threaded through
+        the scan (split once per generated token, matching the host path);
+      * stop masking — a slot finishes on EOS, on ``remaining`` hitting 0,
+        or at the cache boundary; finished slots emit ``PAD_TOKEN_ID``,
+        stop advancing ``pos``/``remaining``, and re-feed their frozen
+        final (token, pos) — deterministic, repeated writes confined to
+        the finished slot's own cache row (replaced wholesale at the next
+        admission), so live slots stay bit-stable.
+
+    Args (all device arrays, B = num_slots):
+      token (B,) int32   last sampled token per slot
+      pos (B,) int32     absolute position of ``token`` (its KV write index)
+      remaining (B,) int32  tokens the slot may still generate
+      done (B,) bool     slot finished / empty (frozen for the whole chunk)
+      eos (B,) int32     per-slot EOS id, -1 = none
+      temps (B,) float32 per-slot sampling temperature, 0 = greedy
+      key                PRNG key (consumed; the advanced key is returned)
+
+    Returns ``(tokens (B, N), cache, token, pos, remaining, done, key)``;
+    per slot the first ``new_pos - old_pos`` entries of ``tokens`` are
+    real, the rest pad.
+    """
+    def body(carry, _):
+        cache, tok, pos, rem, done, key = carry
+        logits, cache = decode_step(params, cache, tok[:, None], pos, cfg,
+                                    run)
+        key, sub = jax.random.split(key)
+        nxt = sample_tokens(sub, logits[:, 0], temps)
+        live = jnp.logical_not(done)
+        emit = jnp.where(live, nxt, PAD_TOKEN_ID)
+        new_pos = jnp.where(live, pos + 1, pos)
+        new_rem = jnp.where(live, rem - 1, rem)
+        hit_eos = (eos >= 0) & (nxt == eos)
+        new_done = done | (live & (hit_eos | (new_rem <= 0)
+                                   | (new_pos >= cache_len - 1)))
+        new_tok = jnp.where(live, nxt, tok)
+        return (cache, new_tok, new_pos, new_rem, new_done, key), emit
+
+    carry = (cache, token, pos, remaining, done, key)
+    (cache, token, pos, remaining, done, key), toks = jax.lax.scan(
+        body, carry, None, length=num_tokens)
+    return toks.T, cache, token, pos, remaining, done, key

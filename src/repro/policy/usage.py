@@ -13,7 +13,8 @@ Charges propagate to all ancestors.
 """
 from __future__ import annotations
 
-from typing import Optional
+import time
+from typing import Callable, Optional
 
 from repro.policy.accounts import Account, AccountTree
 from repro.policy.qos import job_tres
@@ -38,6 +39,7 @@ class FairShareTree(AccountTree):
         self.tres_weights = dict(tres_weights or DEFAULT_TRES_WEIGHTS)
         self.usage: dict[str, float] = {"root": 0.0}
         self._last_decay: float = 0.0
+        self._clock: Optional[Callable[[], float]] = None
 
     # ------------------------------------------------------------- admin ----
     def add_account(self, name: str, parent: str = "root",
@@ -48,6 +50,27 @@ class FairShareTree(AccountTree):
         return acct
 
     # ------------------------------------------------------------- usage ----
+    def enable_wallclock_decay(self, clock: Callable[[], float]
+                               = time.monotonic):
+        """Drive decay from a wall clock instead of an engine event loop.
+
+        For long-lived pure-serving deployments: nothing there calls
+        ``decay_to``, so without this an old hog's usage never decays and
+        it is punished forever.  The ledger's decay epoch is re-anchored
+        to ``clock()`` now (usage accrued so far starts decaying from
+        this instant); afterwards every :meth:`tick` advances decay to
+        the current clock reading.  Do NOT enable on a ledger whose decay
+        is already driven by a simulated cluster clock — the two
+        timebases would mix.
+        """
+        self._clock = clock
+        self._last_decay = float(clock())
+
+    def tick(self):
+        """Advance decay to the wall clock, if enabled (no-op otherwise)."""
+        if self._clock is not None:
+            self.decay_to(self._clock())
+
     def decay_to(self, now: float):
         """Apply exponential half-life decay up to ``now``."""
         dt = now - self._last_decay

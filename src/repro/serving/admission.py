@@ -6,7 +6,10 @@ The batch scheduler (``repro.cluster``) and this controller consult the
 ledger, one QOS catalogue — so a single ``sshare`` call reports a tenant's
 batch jobs *and* served tokens against one set of shares.
 
-Per-tenant FIFO queues replace the engine's single deque.  When a slot
+Per-tenant queues replace the engine's single deque.  *Within* a tenant
+queue requests are ordered by ``(QOS priority desc, arrival seq)`` — a
+high-QOS request never waits behind a same-tenant scavenger one (the
+cross-tenant analogue has always held via preemption).  When a slot
 frees, the next request comes from the tenant maximizing the same
 multifactor composition the scheduler uses::
 
@@ -15,7 +18,16 @@ multifactor composition the scheduler uses::
 with FIFO arrival order breaking ties.  Serving consumption charges the
 ledger in serving TRES units: generated tokens and KV-cache residency
 (cache lines held per decode step), discounted by the QOS
-``usage_factor`` exactly like batch scavenger cycles.
+``usage_factor`` exactly like batch scavenger cycles.  The fused decode
+engine charges once per chunk through :meth:`charge_bulk`, which groups
+by (tenant, QOS) so ledger writes stay O(tenants) per chunk no matter
+the slot count.
+
+With ``wall_clock_decay=True`` the shared ledger decays on
+``time.monotonic()`` at every pick/charge — for long-lived pure-serving
+deployments where no cluster event loop drives ``decay_to`` (otherwise
+an old hog would never be forgiven).  Leave it off when the ledger is
+shared with a simulated cluster clock.
 
 QOS rules carry over unchanged:
 
@@ -29,8 +41,9 @@ QOS rules carry over unchanged:
 """
 from __future__ import annotations
 
-import collections
+import bisect
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -53,10 +66,11 @@ TRES_SLOTS = "slots"
 
 @dataclass
 class Tenant:
-    """One serving tenant: an account in the shared tree + a FIFO queue."""
+    """One serving tenant: an account in the shared tree + a queue kept
+    sorted by (QOS priority desc, arrival seq)."""
     name: str
     shares: int = 1
-    queue: collections.deque = field(default_factory=collections.deque)
+    queue: list = field(default_factory=list)
     # decode slots currently held, keyed by QOS — GrpTRES caps are
     # per-(account, QOS), matching the batch scheduler's accounting
     slots_by_qos: dict = field(default_factory=dict)
@@ -75,10 +89,14 @@ class AdmissionController:
 
     def __init__(self, tree: Optional[FairShareTree] = None,
                  qos_table: Optional[dict[str, QOS]] = None,
-                 weights: Optional[PriorityWeights] = None):
+                 weights: Optional[PriorityWeights] = None,
+                 wall_clock_decay: bool = False,
+                 clock=time.monotonic):
         self.tree = tree if tree is not None else FairShareTree()
         for key, w in SERVING_TRES_WEIGHTS.items():
             self.tree.tres_weights.setdefault(key, w)
+        if wall_clock_decay:
+            self.tree.enable_wallclock_decay(clock)
         self.qos_table = dict(qos_table) if qos_table is not None \
             else default_qos_table()
         self.weights = weights or PriorityWeights()
@@ -105,19 +123,26 @@ class AdmissionController:
         return t
 
     # ------------------------------------------------------------ queues ----
+    def _order_key(self, req):
+        """In-queue ordering: highest QOS first, then arrival order."""
+        qos = self.qos_table.get(req.qos)
+        return (-(qos.priority if qos else 0), req._seq)
+
     def submit(self, req):
-        """Enqueue a request on its tenant's FIFO (auto-registering an
-        unknown tenant with 1 share, like the scheduler's lenient
-        auto-association)."""
+        """Enqueue a request on its tenant's queue — (QOS priority,
+        arrival) ordered — auto-registering an unknown tenant with 1
+        share, like the scheduler's lenient auto-association."""
         t = self.add_tenant(req.tenant)
         req._seq = next(self._seq)
-        t.queue.append(req)
+        bisect.insort(t.queue, req, key=self._order_key)
 
     def requeue(self, req):
-        """A preempted request goes back to the *head* of its tenant's
-        queue, partial output retained: first in line when capacity
-        returns."""
-        self.tenants[req.tenant].queue.appendleft(req)
+        """A preempted request goes back into its tenant's queue with
+        partial output retained.  Its original arrival seq makes it first
+        in line within its QOS class when capacity returns (a later,
+        higher-QOS arrival may still outrank it — by design)."""
+        bisect.insort(self.tenants[req.tenant].queue, req,
+                      key=self._order_key)
 
     def pending(self) -> int:
         return sum(len(t.queue) for t in self.tenants.values())
@@ -150,6 +175,7 @@ class AdmissionController:
                                qos.grp_tres)
 
     def _best_tenant(self, eligible=None) -> Optional[Tenant]:
+        self.tree.tick()                   # wall-clock decay, if enabled
         best, best_key = None, None
         for t in self.tenants.values():
             if not t.queue or self._over_cap(t, t.queue[0]):
@@ -168,7 +194,7 @@ class AdmissionController:
         t = self._best_tenant()
         if t is None:
             return None
-        req = t.queue.popleft()
+        req = t.queue.pop(0)
         t.slots_by_qos[req.qos] = t.slots_by_qos.get(req.qos, 0) + 1
         return req
 
@@ -213,7 +239,7 @@ class AdmissionController:
             return (vq.priority if vq else 0,
                     self.tree.fair_share_factor(r.tenant), -r._seq)
         victim = min(victims, key=vkey)
-        t.queue.popleft()
+        t.queue.pop(0)
         t.slots_by_qos[head.qos] = t.slots_by_qos.get(head.qos, 0) + 1
         return head, victim
 
@@ -223,11 +249,35 @@ class AdmissionController:
         request's tenant in the shared ledger (QOS usage_factor applied,
         so scavenger tokens are discounted like scavenger job-seconds).
 
-        No decay advance: the ledger's clock is driven by whoever owns it
-        (the cluster's event loop, or ``tree.decay_to`` directly).
+        No decay advance unless ``wall_clock_decay`` was enabled: the
+        ledger's clock is driven by whoever owns it (the cluster's event
+        loop, ``tree.decay_to`` directly, or the wall clock when opted
+        in).
         """
+        self.tree.tick()
         qos = self.qos_table.get(req.qos)
         return self.tree.charge_tres(
             req.tenant,
             {"tokens": float(tokens), "gres/kv_token": float(kv_tokens)},
             usage_factor=qos.usage_factor if qos else 1.0)
+
+    def charge_bulk(self, charges) -> float:
+        """Charge a chunk's worth of consumption in one pass: ``charges``
+        is an iterable of ``(req, tokens, kv_tokens)``.  Grouped by
+        (tenant, QOS) before hitting the ledger, so the fused decode
+        engine pays O(tenants) ledger writes per chunk regardless of slot
+        count or chunk length.  Returns the total charged amount."""
+        self.tree.tick()
+        grouped: dict[tuple, list[float]] = {}
+        for req, tokens, kv_tokens in charges:
+            acc = grouped.setdefault((req.tenant, req.qos), [0.0, 0.0])
+            acc[0] += tokens
+            acc[1] += kv_tokens
+        total = 0.0
+        for (tenant, qos_name), (tokens, kv_tokens) in grouped.items():
+            qos = self.qos_table.get(qos_name)
+            total += self.tree.charge_tres(
+                tenant,
+                {"tokens": tokens, "gres/kv_token": kv_tokens},
+                usage_factor=qos.usage_factor if qos else 1.0)
+        return total

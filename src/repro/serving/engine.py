@@ -6,31 +6,45 @@ behind a multi-tenant :class:`~repro.serving.admission.AdmissionController`;
 when a slot frees, the next request is chosen by the same
 ``2^(-usage/shares)`` fair-share priority the batch scheduler uses, then
 prefilled (its cache slice written into the batch cache at the slot index)
-and joins the batched one-token decode loop.  Finished sequences (EOS or
+and joins the batched decode loop.  Finished sequences (EOS or
 max_new_tokens) free their slot immediately — the engine never waits for
 the whole batch, which is the throughput property continuous batching
 exists for.
 
+The decode hot loop is **device-resident** (the fast path): sampling and
+stop handling run inside the jitted step (``models.model.decode_n``), and
+one dispatch generates ``decode_chunk`` tokens per slot via ``lax.scan``.
+The host syncs ``tokens/pos/remaining/done`` once per chunk, then does
+admission / ledger / metrics work exactly as before — so QOS preemption
+and fair-share picks happen at chunk boundaries.  ``fused=False`` keeps
+the original one-token host loop (reference + benchmark baseline).
+
+Prefill is **bucketed** when ``prefill_buckets`` is set (full-attention,
+non-sliding-window configs): prompts pad to the next bucket length so the
+jitted prefill compiles once per bucket instead of once per distinct
+prompt length, and the cache slice lands in the batch cache through one
+pre-jitted donated ``dynamic_update_slice`` insert.
+
 Multi-tenancy rides entirely on the host side: admission picks, GrpTRES
 slot caps, QOS preemption (a blocked high request evicts one scavenger
 slot; the victim requeues with its partial output retained and resumes
-exactly where it stopped), and per-token ledger charges are all O(tenants)
-Python per step — the batched decode step stays a single jitted call per
-token across all active slots.
+exactly where it stopped), and per-chunk batched ledger charges are all
+O(tenants) Python per chunk.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
-from repro.models import init_cache, init_params, prefill
-from repro.models.model import decode_step
+from repro.models import init_cache, prefill
+from repro.models.model import decode_n, decode_step
 from repro.monitoring import MetricsRegistry
 from repro.monitoring.metrics import (
     METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_TENANT_ADMITTED,
@@ -53,13 +67,16 @@ class Request:
     done: bool = False
     preemptions: int = 0               # times evicted mid-decode
     _seq: int = field(default=0, repr=False)   # admission arrival order
+    _slot: int = field(default=-1, repr=False)  # current decode slot (-1 = none)
 
 
 class DecodeEngine:
     def __init__(self, cfg: ModelConfig, params, num_slots: int = 8,
                  cache_len: int = 1024, run: Optional[RunConfig] = None,
                  metrics: Optional[MetricsRegistry] = None, seed: int = 0,
-                 admission: Optional[AdmissionController] = None):
+                 admission: Optional[AdmissionController] = None,
+                 decode_chunk: int = 1, fused: bool = True,
+                 prefill_buckets: Union[None, str, Sequence[int]] = None):
         self.cfg = cfg
         self.params = params
         self.run = run or RunConfig(remat="none")
@@ -68,13 +85,19 @@ class DecodeEngine:
         self.metrics = metrics or MetricsRegistry()
         self.admission = admission if admission is not None \
             else AdmissionController()
+        self.decode_chunk = max(1, int(decode_chunk))
+        self.fused = fused
         self.cache = init_cache(cfg, num_slots, cache_len)
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.pos = np.zeros(num_slots, np.int64)       # next position per slot
         self.last_tok = np.zeros(num_slots, np.int32)
         self.remaining = np.zeros(num_slots, np.int64)
         self._key = jax.random.PRNGKey(seed)
+        self._buckets = self._resolve_buckets(prefill_buckets)
         self._step = self._build_step()
+        self._decode_n = self._build_decode_n()
+        self._insert = self._build_insert()
+        self._prefill_fn = self._build_prefill()
 
     # ------------------------------------------------------------ jitted ----
     def _build_step(self):
@@ -87,6 +110,75 @@ class DecodeEngine:
             return logits[:, 0], cache
 
         return step
+
+    def _build_decode_n(self):
+        cfg, run = self.cfg, self.run
+        chunk, cache_len = self.decode_chunk, self.cache_len
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def step_n(params, cache, token, pos, remaining, done, eos, temps,
+                   key):
+            return decode_n(params, cache, token, pos, remaining, done, eos,
+                            temps, key, cfg, run, chunk, cache_len)
+
+        return step_n
+
+    def _build_insert(self):
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def insert(batch_cache, one_cache, slot):
+            def put(batch_leaf, one_leaf):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    batch_leaf, one_leaf.astype(batch_leaf.dtype), slot,
+                    axis=1)
+            return jax.tree.map(put, batch_cache, one_cache)
+
+        return insert
+
+    def _build_prefill(self):
+        cfg, run, cache_len = self.cfg, self.run, self.cache_len
+
+        @jax.jit
+        def prefill_fn(params, tokens, last_pos):
+            return prefill(params, {"tokens": tokens}, cfg, run,
+                           cache_len=cache_len, last_pos=last_pos)
+
+        return prefill_fn
+
+    def _resolve_buckets(self, spec):
+        """Power-of-two prompt-length buckets, or None (exact-length
+        prefill).  Bucketing pads the prompt tail, which is only sound
+        when pad tokens cannot leak into real state: full attention with
+        causal masking (no SSM recurrence to pollute) and a non-ring
+        cache (no sliding window), otherwise it silently degrades to the
+        exact path."""
+        if not spec:
+            return None
+        attn_only = self.cfg.attn_every == 1 and self.cfg.ssm is None
+        if not attn_only or self.cfg.sliding_window is not None:
+            return None
+        if spec == "auto":
+            out, b = [], 32
+            while b < self.cache_len:
+                out.append(b)
+                b *= 2
+            out.append(self.cache_len)
+            return tuple(out)
+        out = tuple(sorted({int(b) for b in spec}))
+        assert out and 0 < out[0] and out[-1] <= self.cache_len, out
+        if out[-1] < self.cache_len:       # any resume prompt must fit
+            out = out + (self.cache_len,)
+        return out
+
+    @property
+    def prefill_buckets(self):
+        return self._buckets
+
+    def prefill_compilations(self) -> int:
+        """Distinct prefill programs compiled so far — one per bucket on
+        the bucketed path.  The exact-length path runs the eager
+        (unjitted) prefill and never touches this cache, so it reports
+        0 there."""
+        return int(self._prefill_fn._cache_size())
 
     # ------------------------------------------------------------ public ----
     def submit(self, req: Request):
@@ -134,29 +226,36 @@ class DecodeEngine:
             toks = np.concatenate(
                 [req.prompt, np.asarray(req.output[:-1], np.int32)])
         else:
-            toks = req.prompt
-        prompt = jnp.asarray(toks, jnp.int32)[None]
+            toks = np.asarray(req.prompt, np.int32)
         with_timer = self.metrics.histogram(
             "serve_prefill_seconds", "prefill latency")
         t0 = time.perf_counter()
         try:
-            logits, cache1 = prefill(
-                self.params, {"tokens": prompt}, self.cfg, self.run,
-                cache_len=self.cache_len)
+            if self._buckets is not None:
+                P = len(toks)
+                L = next(b for b in self._buckets if b >= P)
+                padded = np.zeros(L, np.int32)
+                padded[:P] = toks
+                logits, cache1 = self._prefill_fn(
+                    self.params, jnp.asarray(padded)[None],
+                    jnp.asarray(P - 1, jnp.int32))
+            else:
+                prompt = jnp.asarray(toks, jnp.int32)[None]
+                logits, cache1 = prefill(
+                    self.params, {"tokens": prompt}, self.cfg, self.run,
+                    cache_len=self.cache_len)
         finally:
             with_timer.observe(time.perf_counter() - t0)
-        # write this request's cache slice into the batch cache
-        def put(batch_leaf, one_leaf):
-            return jax.lax.dynamic_update_slice_in_dim(
-                batch_leaf, one_leaf.astype(batch_leaf.dtype), slot,
-                axis=1)
-        self.cache = jax.tree.map(put, self.cache, cache1)
+        # write this request's cache slice into the batch cache through
+        # the pre-jitted donated insert (one compile, zero retraces)
+        self.cache = self._insert(self.cache, cache1, slot)
         if req.output:
             tok = int(req.output[-1])      # resume: last token re-decodes
         else:
             tok = int(jnp.argmax(logits[0, -1]))
             req.output.append(tok)
         self.slots[slot] = req
+        req._slot = slot
         self.pos[slot] = len(toks)
         self.last_tok[slot] = tok
         self.remaining[slot] = req.max_new_tokens - len(req.output)
@@ -170,16 +269,26 @@ class DecodeEngine:
 
     def _evict(self, victim: Request) -> int:
         """Evict a running request from its slot; it requeues at the head
-        of its tenant queue with partial output retained.  Returns the
-        freed slot index."""
-        slot = self.slots.index(victim)
+        of its QOS class in its tenant queue with partial output retained.
+        Returns the freed slot index (O(1) via the request's slot tag)."""
+        slot = victim._slot
+        assert slot >= 0 and self.slots[slot] is victim, (slot, victim.rid)
         self.slots[slot] = None
+        victim._slot = -1
         victim.preemptions += 1
         self.admission.release(victim)
         self.admission.requeue(victim)
         self.metrics.counter(
             METRIC_SERVE_PREEMPTIONS, "evicted decode slots").inc()
         return slot
+
+    def _finish(self, slot: int):
+        req = self.slots[slot]
+        req.done = True
+        self.slots[slot] = None
+        req._slot = -1
+        self.admission.release(req)
+        self.metrics.counter("serve_requests_completed").inc()
 
     def _maybe_finish(self, slot: int):
         req = self.slots[slot]
@@ -188,31 +297,100 @@ class DecodeEngine:
         if (req.eos_id is not None and req.output
                 and req.output[-1] == req.eos_id) or self.remaining[slot] <= 0 \
                 or self.pos[slot] >= self.cache_len - 1:
-            req.done = True
-            self.slots[slot] = None
-            self.admission.release(req)
-            self.metrics.counter("serve_requests_completed").inc()
+            self._finish(slot)
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
-        """Per-slot sampling.  logits: (num_slots, V)."""
+        """Host-side per-slot sampling (fused=False path).
+        logits: (num_slots, V)."""
         temps = np.array([
             (self.slots[i].temperature if self.slots[i] else 0.0)
             for i in range(self.num_slots)], np.float32)
         greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        # split unconditionally — one key per generated token, exactly the
+        # stream decode_n consumes, so host and fused paths stay
+        # interchangeable even when greedy and sampled slots mix
+        self._key, sub = jax.random.split(self._key)
         if (temps <= 0).all():
             return greedy.astype(np.int32)
-        self._key, sub = jax.random.split(self._key)
         t = jnp.maximum(jnp.asarray(temps), 1e-4)[:, None]
         sampled = np.asarray(
-            jax.random.categorical(sub, logits / t, axis=-1))
+            jax.random.categorical(sub, logits.astype(jnp.float32) / t,
+                                   axis=-1))
         return np.where(temps > 0, sampled, greedy).astype(np.int32)
 
+    # -------------------------------------------------------------- step ----
     def step(self) -> int:
-        """Admit + one batched decode token.  Returns #active + #queued."""
+        """Admit + one batched decode dispatch (``decode_chunk`` tokens on
+        the fused path, one on the host path).  Returns #active + #queued."""
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return self.admission.pending()
+        if self.fused:
+            self._step_fused(active)
+        else:
+            self._step_host(active)
+        return (len([r for r in self.slots if r is not None])
+                + self.admission.pending())
+
+    def _step_fused(self, active: list):
+        """Device-resident chunk: one dispatch, one host sync."""
+        done = np.array([self.slots[i] is None for i in
+                         range(self.num_slots)])
+        eos = np.array([
+            (self.slots[i].eos_id if self.slots[i] is not None
+             and self.slots[i].eos_id is not None else -1)
+            for i in range(self.num_slots)], np.int32)
+        temps = np.array([
+            (self.slots[i].temperature if self.slots[i] else 0.0)
+            for i in range(self.num_slots)], np.float32)
+        t0 = time.perf_counter()
+        toks, self.cache, token, pos, remaining, done_d, self._key = \
+            self._decode_n(
+                self.params, self.cache, jnp.asarray(self.last_tok),
+                jnp.asarray(self.pos.astype(np.int32)),
+                jnp.asarray(self.remaining.astype(np.int32)),
+                jnp.asarray(done), jnp.asarray(eos), jnp.asarray(temps),
+                self._key)
+        # ONE sync per chunk: everything below is host-side numpy
+        toks = np.asarray(toks)
+        pos = np.asarray(pos)
+        token = np.asarray(token)
+        remaining = np.asarray(remaining)
+        done_d = np.asarray(done_d)
+        self.metrics.histogram("serve_decode_seconds",
+                               "batched decode-step latency").observe(
+            time.perf_counter() - t0)
+        charges = []
+        tenant_tokens: dict[str, int] = {}
+        total = 0
+        for i in active:
+            req = self.slots[i]
+            n_gen = int(pos[i]) - int(self.pos[i])
+            if n_gen:
+                req.output.extend(int(t) for t in toks[i, :n_gen])
+                # per-chunk charge: n tokens + KV-line rent summed over the
+                # chunk's steps (sum_{j=1..n} pos0+j), exactly the per-token
+                # path's total
+                kv = n_gen * int(self.pos[i]) + n_gen * (n_gen + 1) // 2
+                charges.append((req, n_gen, kv))
+                tenant_tokens[req.tenant] = \
+                    tenant_tokens.get(req.tenant, 0) + n_gen
+                total += n_gen
+            self.pos[i] = pos[i]
+            self.last_tok[i] = token[i]
+            self.remaining[i] = remaining[i]
+            if done_d[i]:
+                self._finish(i)
+        self.admission.charge_bulk(charges)
+        self.metrics.counter("serve_tokens_generated").inc(total)
+        tok_counter = self.metrics.counter(
+            METRIC_SERVE_TENANT_TOKENS, "generated tokens per tenant")
+        for tenant, n in tenant_tokens.items():
+            tok_counter.inc(n, tenant=tenant)
+
+    def _step_host(self, active: list):
+        """Original per-token host loop (baseline / reference path)."""
         token = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos.astype(np.int32))
         t0 = time.perf_counter()
@@ -237,8 +415,6 @@ class DecodeEngine:
             METRIC_SERVE_TENANT_TOKENS, "generated tokens per tenant")
         for tenant, n in tenant_tokens.items():
             tok_counter.inc(n, tenant=tenant)
-        return (len([r for r in self.slots if r is not None])
-                + self.admission.pending())
 
     def run_to_completion(self, max_steps: int = 10_000):
         for _ in range(max_steps):

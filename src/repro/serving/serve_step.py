@@ -4,6 +4,11 @@
 ONE new token against a seq_len KV cache.  Shardings follow
 core.sharding.cache_shardings (batch over data axes, heads over model;
 at global_batch=1 the state shards over `model` only).
+
+``make_fused_serve_step`` is the device-resident fast-path twin: the same
+shardings around ``models.model.decode_n`` (N tokens per dispatch, fused
+sampling + stop masking), so the fused signature the serving engine runs
+can be lowered/cost-analyzed by the dry-run machinery too.
 """
 from __future__ import annotations
 
@@ -15,7 +20,7 @@ from repro.configs.base import InputShape, ModelConfig, RunConfig
 from repro.core import sharding as shd
 from repro.core.actshard import activation_sharding
 from repro.models import abstract_params, init_cache
-from repro.models.model import decode_step
+from repro.models.model import decode_n, decode_step
 
 
 def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
@@ -51,3 +56,43 @@ def serve_step_lowering_args(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
     token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
     pos = jax.ShapeDtypeStruct((), jnp.int32)
     return ap, cache, token, pos
+
+
+def make_fused_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                          batch: int, cache_len: int, num_tokens: int = 8):
+    """Returns jitted fused-chunk step — the decode_n signature the engine
+    dispatches: f(params, cache, token, pos, remaining, done, eos, temps,
+    key) -> (tokens, cache, token, pos, remaining, done, key)."""
+    p_sh = shd.param_shardings(cfg, mesh, run)
+    cache_abs = init_cache(cfg, batch, cache_len, abstract=True)
+    c_sh = shd.cache_shardings(cfg, mesh, run, cache_abs)
+    act_rules = shd.make_activation_rules(cfg, mesh, run)
+
+    def step(params, cache, token, pos, remaining, done, eos, temps, key):
+        with activation_sharding(act_rules):
+            return decode_n(params, cache, token, pos, remaining, done,
+                            eos, temps, key, cfg, run, num_tokens,
+                            cache_len)
+
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh) + (None,) * 7,
+        out_shardings=(None, c_sh) + (None,) * 5,
+        donate_argnums=(1,),
+    )
+
+
+def fused_serve_step_lowering_args(cfg: ModelConfig, run: RunConfig,
+                                   mesh: Mesh, shape: InputShape):
+    """Abstract args matching ``make_fused_serve_step`` for ``.lower()``."""
+    B = shape.global_batch
+    ap = abstract_params(cfg)
+    cache_abs = init_cache(cfg, B, shape.seq_len, abstract=True)
+    c_sh = shd.cache_shardings(cfg, mesh, run, cache_abs)
+    cache = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        cache_abs, c_sh)
+    vec = lambda dt: jax.ShapeDtypeStruct((B,), dt)  # noqa: E731
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return (ap, cache, vec(jnp.int32), vec(jnp.int32), vec(jnp.int32),
+            vec(jnp.bool_), vec(jnp.int32), vec(jnp.float32), key)

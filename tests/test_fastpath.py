@@ -1,0 +1,361 @@
+"""Device-resident decode fast path: fused sampling / multi-token chunks
+are bit-identical to the per-token host loop, bucketed prefill compiles
+once per bucket (not per prompt length), the Pallas flash-decode kernel
+matches the naive oracle, and tenancy semantics (preemption at chunk
+boundaries, 10:1 fair-share convergence with per-chunk bulk charges,
+wall-clock ledger decay, QOS ordering within a tenant queue) survive the
+rebuild."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_reduced_config
+from repro.kernels import ops
+from repro.kernels.ref import decode_attention_ref
+from repro.monitoring.metrics import METRIC_SERVE_PREEMPTIONS
+from repro.policy import FairShareTree
+from repro.serving import AdmissionController, DecodeEngine, Request
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.models import init_params
+    cfg = get_reduced_config("stablelm-3b")
+    return cfg, init_params(cfg, 0)
+
+
+def _run(cfg, params, reqs, **engine_kw):
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64, **engine_kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    return eng
+
+
+def _reqs(cfg, n=4, max_new=6, temperature=0.0, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 4 + 3 * i).astype(
+                        np.int32),
+                    max_new_tokens=max_new + i, temperature=temperature)
+            for i in range(n)]
+
+
+# ---------------------------------------------------- fused decode chunks ----
+
+def test_fused_greedy_bit_identical_to_host_path(tiny_model):
+    """Acceptance: fused sampling == host path, token for token (greedy),
+    for chunk sizes that do and don't divide the generation lengths."""
+    cfg, params = tiny_model
+    ref_reqs = _reqs(cfg)
+    _run(cfg, params, ref_reqs, fused=False)
+    for chunk in (1, 3, 8):
+        got = _reqs(cfg)
+        _run(cfg, params, got, decode_chunk=chunk)
+        assert [r.output for r in got] == [r.output for r in ref_reqs], chunk
+
+
+def test_fused_temperature_matches_host_key_stream(tiny_model):
+    """With temperature > 0 the fused scan splits the PRNG key once per
+    generated token exactly like the host sampler, so outputs are
+    bit-identical when chunks align with the generation length."""
+    cfg, params = tiny_model
+    def one(**kw):
+        req = _reqs(cfg, n=1, max_new=16, temperature=0.8)[0]
+        _run(cfg, params, [req], seed=7, **kw)
+        return req.output
+    ref = one(fused=False)
+    assert one(decode_chunk=1) == ref
+    assert one(decode_chunk=8) == ref
+    assert len(ref) == 16 and len(set(ref)) > 1   # actually sampled
+
+    # mixed batch: a greedy slot and a sampled slot share chunks — the
+    # host sampler splits the key once per token too, so streams align
+    def mixed(**kw):
+        rng = np.random.default_rng(5)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 6).astype(
+                            np.int32),
+                        max_new_tokens=16, temperature=0.8 * i)
+                for i in range(2)]
+        eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64, seed=9,
+                           **kw)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion()
+        return [r.output for r in reqs]
+    assert mixed(decode_chunk=8) == mixed(fused=False)
+
+
+def test_fused_eos_stops_charging_mid_chunk(tiny_model):
+    """Device-side stop masking: a slot hitting EOS inside a chunk stops
+    generating (pad emissions are dropped) and stops charging."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    probe = Request(rid=0, prompt=prompt, max_new_tokens=2)
+    _run(cfg, params, [probe])
+    eos = probe.output[1]                 # second greedy token
+    ctrl = AdmissionController()
+    req = Request(rid=1, prompt=prompt, max_new_tokens=50, eos_id=eos)
+    eng = DecodeEngine(cfg, params, num_slots=1, cache_len=64,
+                       decode_chunk=8, admission=ctrl)
+    eng.submit(req)
+    eng.run_to_completion()
+    assert req.done and len(req.output) == 2 and req.output[-1] == eos
+    # ledger saw 1 decode token (+ prefill rent), not the chunk's 8
+    assert eng.metrics.counter("serve_tokens_generated").value() == 1
+
+
+def test_fused_preemption_at_chunk_boundary(tiny_model):
+    """Acceptance: with decode_chunk > 1 a blocked high-QOS request still
+    evicts exactly one scavenger slot (at the next chunk boundary) and the
+    victim resumes with its partial output retained."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(3)]
+    ctrl = AdmissionController()
+    ctrl.add_tenant("research", shares=1)
+    ctrl.add_tenant("prod", shares=10)
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       decode_chunk=4, admission=ctrl)
+    scavs = [Request(rid=i, prompt=prompts[i], max_new_tokens=16,
+                     tenant="research", qos="scavenger") for i in range(2)]
+    for r in scavs:
+        eng.submit(r)
+    eng.step()                            # one chunk: 1 + 4 tokens each
+    assert all(len(r.output) == 5 and not r.done for r in scavs)
+    partial = {r.rid: list(r.output) for r in scavs}
+
+    hi = Request(rid=2, prompt=prompts[2], max_new_tokens=4,
+                 tenant="prod", qos="high")
+    eng.submit(hi)
+    eng.step()                            # chunk boundary: preempt now
+    assert eng.metrics.counter(METRIC_SERVE_PREEMPTIONS).value() == 1
+    evicted = [r for r in scavs if r.preemptions == 1]
+    assert len(evicted) == 1
+    victim = evicted[0]
+    assert victim.output[:len(partial[victim.rid])] == partial[victim.rid]
+
+    eng.run_to_completion()
+    assert hi.done and all(r.done for r in scavs)
+    # resume correctness: the interrupted run equals a solo greedy run
+    solo = Request(rid=9, prompt=victim.prompt, max_new_tokens=16)
+    _run(cfg, params, [solo], decode_chunk=4)
+    assert victim.output == solo.output
+
+
+def test_fairshare_10_to_1_with_chunked_bulk_charges():
+    """Acceptance: the 10:1 +-15% token-split convergence holds when the
+    ledger is charged once per 8-token chunk via charge_bulk (the fused
+    engine's batching) instead of per token."""
+    ctrl = AdmissionController()
+    ctrl.add_tenant("big", shares=10)
+    ctrl.add_tenant("small", shares=1)
+    import itertools
+    num_slots, chunk = 4, 8
+    slots = [None] * num_slots
+    tokens = {"big": 0, "small": 0}
+    rid = itertools.count()
+
+    def refill():
+        for tenant in ("big", "small"):
+            while ctrl.queued(tenant) < 4:
+                rng = np.random.default_rng(next(rid))
+                ctrl.submit(Request(
+                    rid=next(rid), prompt=rng.integers(0, 32, 8).astype(
+                        np.int32), max_new_tokens=chunk * 2, tenant=tenant))
+
+    refill()
+    for _ in range(400):
+        for i in range(num_slots):
+            if slots[i] is None:
+                req = ctrl.next_request()
+                if req is None:
+                    break
+                slots[i] = req
+                ctrl.charge(req, kv_tokens=len(req.prompt))
+        charges = []
+        for i in range(num_slots):
+            req = slots[i]
+            if req is None:
+                continue
+            n = min(chunk, req.max_new_tokens - len(req.output))
+            req.output.extend([0] * n)
+            tokens[req.tenant] += n
+            kv = sum(len(req.prompt) + len(req.output) - j for j in range(n))
+            charges.append((req, n, kv))
+            if len(req.output) >= req.max_new_tokens:
+                slots[i] = None
+                ctrl.release(req)
+        ctrl.charge_bulk(charges)
+        refill()
+    ratio = tokens["big"] / tokens["small"]
+    assert 10 / 1.15 <= ratio <= 10 * 1.15, (ratio, tokens)
+
+
+# ------------------------------------------------------- bucketed prefill ----
+
+def test_bucketed_prefill_compiles_once_per_bucket(tiny_model):
+    """Acceptance: across 20 random prompt lengths the prefill compiles at
+    most once per bucket — and emits the same tokens as exact-length
+    prefill (the pad tail is provably masked)."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(11)
+    lengths = [int(p) for p in rng.integers(2, 48, 20)]
+    assert len(set(lengths)) > 6          # genuinely mixed lengths
+
+    def reqs():
+        return [Request(rid=i,
+                        prompt=np.random.default_rng(100 + i).integers(
+                            0, cfg.vocab_size, L).astype(np.int32),
+                        max_new_tokens=2)
+                for i, L in enumerate(lengths)]
+
+    exact = reqs()
+    _run(cfg, params, exact, decode_chunk=4)
+    bucketed = reqs()
+    eng = _run(cfg, params, bucketed, decode_chunk=4,
+               prefill_buckets=(16, 32, 64))
+    assert eng.prefill_buckets == (16, 32, 64)
+    assert eng.prefill_compilations() <= len(eng.prefill_buckets)
+    assert [r.output for r in bucketed] == [r.output for r in exact]
+
+
+def test_buckets_refused_for_recurrent_or_ring_caches():
+    """Pad tails leak into SSM recurrences and ring caches — bucketing
+    must silently fall back to exact-length prefill there."""
+    from repro.models import init_params
+    ssm_cfg = get_reduced_config("mamba2-780m")
+    eng = DecodeEngine(ssm_cfg, init_params(ssm_cfg, 0), num_slots=1,
+                       cache_len=32, prefill_buckets="auto")
+    assert eng.prefill_buckets is None
+    win_cfg = dataclasses.replace(get_reduced_config("stablelm-3b"),
+                                  sliding_window=8)
+    eng = DecodeEngine(win_cfg, init_params(win_cfg, 0), num_slots=1,
+                       cache_len=32, prefill_buckets="auto")
+    assert eng.prefill_buckets is None
+
+
+# ------------------------------------------------------------ flash decode ----
+
+DECODE_CASES = [
+    # (B, S, H, K, Dh, block_k)
+    (2, 128, 4, 2, 64, 64),
+    (1, 256, 8, 8, 64, 128),     # MHA
+    (2, 128, 4, 1, 32, 64),      # MQA
+    (1, 512, 4, 2, 128, 128),
+    (3, 64, 2, 2, 16, 64),       # single kv block
+    (2, 96, 3, 1, 32, 32),       # non-pow2 heads
+]
+
+
+@pytest.mark.parametrize("B,S,H,K,Dh,block", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_matches_oracle(B, S, H, K, Dh, block, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, 1, H, Dh)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, K, Dh)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, K, Dh)), dtype)
+    pos = jnp.asarray(RNG.integers(0, S, B), jnp.int32)
+    out = ops.flash_decode(q, k, v, pos, block_k=block, interpret=True)
+    ref = decode_attention_ref(q, k, v, pos)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_flash_decode_through_engine_matches_reference(tiny_model):
+    """The kernel-selection switch: use_pallas decode through the fused
+    engine reproduces the reference path's greedy tokens."""
+    cfg, params = tiny_model
+    ref_reqs = _reqs(cfg, n=3)
+    _run(cfg, params, ref_reqs, decode_chunk=8)
+    got = _reqs(cfg, n=3)
+    _run(cfg, params, got, decode_chunk=8,
+         run=RunConfig(remat="none", use_pallas=True))
+    assert [r.output for r in got] == [r.output for r in ref_reqs]
+
+
+# --------------------------------------------------- ledger / queue orders ----
+
+def test_wallclock_ledger_decay_forgives_old_hogs():
+    """ROADMAP item: with no cluster event loop driving ``decay_to``, the
+    opt-in wall clock decays the ledger, so an old hog's ancient usage
+    stops dominating once fresh consumption lands."""
+    clock = {"t": 0.0}
+    ctrl = AdmissionController(
+        tree=FairShareTree(half_life_s=100.0),
+        wall_clock_decay=True, clock=lambda: clock["t"])
+    ctrl.add_tenant("hog", shares=1)
+    ctrl.add_tenant("fresh", shares=1)
+    ctrl.tree.charge_tres("hog", {"tokens": 1000.0})
+    assert ctrl.tree.fair_share_factor("hog") < 0.3   # punished while hot
+    clock["t"] += 1000.0                  # 10 half-lives pass, no events
+    fresh_req = Request(rid=0, prompt=np.zeros(4, np.int32),
+                        tenant="fresh")
+    ctrl.charge(fresh_req, tokens=10)     # any charge/pick ticks the clock
+    assert ctrl.tree.usage["hog"] < 1.5   # 1000 * 2^-10: absolute decay
+    # the decayed hog no longer dominates the root total, so its standing
+    # recovers; without decay it would still hold ~99% of usage (~0.25)
+    assert ctrl.tree.fair_share_factor("hog") > 0.85
+
+
+def test_wallclock_decay_off_by_default():
+    ctrl = AdmissionController(tree=FairShareTree(half_life_s=100.0))
+    ctrl.tree.charge_tres("hog", {"tokens": 1000.0})
+    ctrl.submit(Request(rid=0, prompt=np.zeros(4, np.int32), tenant="hog"))
+    ctrl.next_request()
+    assert ctrl.tree.usage["hog"] == pytest.approx(1000.0)
+
+
+def test_qos_orders_within_tenant_queue():
+    """ROADMAP item: a high-QOS request no longer waits behind a
+    same-tenant scavenger one; FIFO still breaks ties within a QOS."""
+    ctrl = AdmissionController()
+    scav1 = Request(rid=0, prompt=np.zeros(4, np.int32), qos="scavenger")
+    norm = Request(rid=1, prompt=np.zeros(4, np.int32), qos="normal")
+    hi = Request(rid=2, prompt=np.zeros(4, np.int32), qos="high")
+    scav2 = Request(rid=3, prompt=np.zeros(4, np.int32), qos="scavenger")
+    for r in (scav1, norm, hi, scav2):
+        ctrl.submit(r)
+    order = [ctrl.next_request() for _ in range(4)]
+    assert order == [hi, norm, scav1, scav2]
+
+
+def test_requeued_victim_heads_its_qos_class():
+    ctrl = AdmissionController()
+    victim = Request(rid=0, prompt=np.zeros(4, np.int32), qos="scavenger")
+    ctrl.submit(victim)
+    assert ctrl.next_request() is victim
+    later = Request(rid=1, prompt=np.zeros(4, np.int32), qos="scavenger")
+    ctrl.submit(later)
+    ctrl.release(victim)
+    ctrl.requeue(victim)                  # original seq: ahead of `later`
+    hi = Request(rid=2, prompt=np.zeros(4, np.int32), qos="high")
+    ctrl.submit(hi)                       # ...but behind higher QOS
+    assert [ctrl.next_request() for _ in range(3)] == [hi, victim, later]
+
+
+# ------------------------------------------------------------ dry-run glue ----
+
+def test_fused_serve_step_lowers(tiny_model):
+    from repro.configs.base import InputShape
+    from repro.launch.mesh import make_mesh
+    from repro.serving import (
+        fused_serve_step_lowering_args, make_fused_serve_step,
+    )
+    cfg, _ = tiny_model
+    run = RunConfig(strategy="dp", remat="none")
+    mesh = make_mesh(1, 1)
+    shape = InputShape("decode_smoke", 64, 2, "decode")
+    step = make_fused_serve_step(cfg, run, mesh, 2, 64, num_tokens=4)
+    args = fused_serve_step_lowering_args(cfg, run, mesh, shape)
+    lowered = step.lower(*args)
+    assert "while" in lowered.as_text() or "scan" in lowered.as_text()
