@@ -23,6 +23,12 @@ def main(argv=None) -> int:
                          "roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as a JSON artifact")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
+                    help="regression gate: exit 1 if any benchmark runs "
+                         ">20%% slower than the named --json baseline")
+    ap.add_argument("--compare-threshold", type=float, default=0.20,
+                    help="allowed fractional slowdown vs baseline "
+                         "(default 0.20)")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -58,6 +64,43 @@ def main(argv=None) -> int:
         print(f"[wrote {args.json}]", file=sys.stderr)
     print(f"\n{len(results)} benchmarks in "
           f"{time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    if args.compare:
+        return compare_against(results, args.compare,
+                               args.compare_threshold)
+    return 0
+
+
+def compare_against(results, baseline_path: str,
+                    threshold: float = 0.20) -> int:
+    """CI regression gate: compare this run against a ``--json`` baseline
+    artifact and fail (exit 1) on any >``threshold`` slowdown — i.e. a
+    >20%% throughput drop by default.  Benchmarks present on only one
+    side are reported but never fail the gate (suites evolve)."""
+    import json
+    with open(baseline_path) as f:
+        base = {row["name"]: row["us_per_call"] for row in json.load(f)}
+    regressions = []
+    for name, us, _ in results:
+        old = base.get(name)
+        if old is None:
+            print(f"[compare] {name}: no baseline (new benchmark)",
+                  file=sys.stderr)
+            continue
+        ratio = us / old if old > 0 else 1.0
+        verdict = "REGRESSION" if ratio > 1.0 + threshold else "ok"
+        print(f"[compare] {name}: {old:.1f} -> {us:.1f} us "
+              f"({ratio:.2f}x) {verdict}", file=sys.stderr)
+        if ratio > 1.0 + threshold:
+            regressions.append((name, old, us, ratio))
+    missing = sorted(set(base) - {name for name, _, _ in results})
+    for name in missing:
+        print(f"[compare] {name}: in baseline but not run",
+              file=sys.stderr)
+    if regressions:
+        print(f"[compare] FAIL: {len(regressions)} regression(s) beyond "
+              f"{threshold:.0%}", file=sys.stderr)
+        return 1
+    print("[compare] gate passed", file=sys.stderr)
     return 0
 
 

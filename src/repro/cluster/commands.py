@@ -220,6 +220,54 @@ def sacctmgr_add_user(cluster: Cluster, user: str, account: str) -> str:
     return f" Adding User(s)\n  {user}\n Settings\n  Account={account}"
 
 
+def sacctmgr_modify_account(cluster: Cluster, name: str,
+                            fairshare: Optional[int] = None,
+                            parent: Optional[str] = None,
+                            description: Optional[str] = None) -> str:
+    """``sacctmgr modify account <name> set fairshare=<n> [parent=<p>]`` —
+    live shares edit; the very next scheduling/sshare pass computes
+    priorities from the new values (NormShares is derived on read)."""
+    cluster.fairshare.modify_account(name, shares=fairshare, parent=parent,
+                                     description=description)
+    settings = []
+    if fairshare is not None:
+        settings.append(f"Fairshare={fairshare}")
+    if parent is not None:
+        settings.append(f"Parent={parent}")
+    if description is not None:
+        settings.append(f"Description={description}")
+    return (" Modified account...\n  " + name + "\n Settings\n  "
+            + "\n  ".join(settings or ["(no change)"]))
+
+
+def sacctmgr_modify_qos(cluster: Cluster, name: str,
+                        priority: Optional[int] = None,
+                        preempt: Optional[tuple] = None,
+                        grp_tres: Optional[dict] = None,
+                        usage_factor: Optional[float] = None) -> str:
+    """``sacctmgr modify qos <name> set priority=<n> grptres=... `` — live
+    QOS edit.  QOS objects are frozen, so the catalogue entry is replaced
+    wholesale; everything that consults ``cluster.qos_table`` (priority
+    engine, preemption, GrpTRES holds) sees the new tier on its next
+    pass."""
+    import dataclasses as _dc
+
+    assert name in cluster.qos_table, f"unknown QOS {name!r}"
+    changes = {}
+    if priority is not None:
+        changes["priority"] = priority
+    if preempt is not None:
+        changes["preempt"] = tuple(preempt)
+    if grp_tres is not None:
+        changes["grp_tres"] = dict(grp_tres)
+    if usage_factor is not None:
+        changes["usage_factor"] = usage_factor
+    cluster.qos_table[name] = _dc.replace(cluster.qos_table[name], **changes)
+    settings = [f"{k}={v}" for k, v in changes.items()] or ["(no change)"]
+    return (" Modified qos...\n  " + name + "\n Settings\n  "
+            + "\n  ".join(settings))
+
+
 def sacctmgr_show_assoc(cluster: Cluster) -> str:
     """``sacctmgr show assoc format=Account,ParentName,User,Fairshare``."""
     t = cluster.fairshare
@@ -246,20 +294,31 @@ def sacctmgr_show_qos(cluster: Cluster) -> str:
     return "\n".join(rows)
 
 
-def sshare(cluster: Cluster) -> str:
-    """``sshare -l``: the fair-share tree with live usage and factors."""
+def sshare(cluster: Cluster, tres: bool = False) -> str:
+    """``sshare -l``: the fair-share tree with live usage and factors.
+
+    ``tres=True`` appends a TRESUsage column with the decayed raw
+    per-resource consumption (``sshare -l -o ...,TRESRunMins``-style) —
+    for a paged serving tenant, ``gres/kv_page`` there is its true HBM
+    residency (page-steps held), not a whole-slot approximation."""
     t = cluster.fairshare
     t.decay_to(cluster.clock)
-    rows = [f"{'Account':<14}{'RawShares':>10}{'NormShares':>11}"
-            f"{'RawUsage':>12}{'NormUsage':>10}{'FairShare':>10}"]
+    header = (f"{'Account':<14}{'RawShares':>10}{'NormShares':>11}"
+              f"{'RawUsage':>12}{'NormUsage':>10}{'FairShare':>10}")
+    rows = [header + ("  TRESUsage" if tres else "")]
 
     def walk(name: str, depth: int):
         a = t.accounts[name]
         label = (" " * depth) + a.name
-        rows.append(f"{label:<14}{a.shares:>10}{t.norm_shares(name):>11.4f}"
-                    f"{t.usage.get(name, 0.0):>12.0f}"
-                    f"{t.norm_usage(name):>10.4f}"
-                    f"{t.fair_share_factor(name):>10.4f}")
+        row = (f"{label:<14}{a.shares:>10}{t.norm_shares(name):>11.4f}"
+               f"{t.usage.get(name, 0.0):>12.0f}"
+               f"{t.norm_usage(name):>10.4f}"
+               f"{t.fair_share_factor(name):>10.4f}")
+        if tres:
+            usage = {k: round(v) for k, v in
+                     t.tres_usage_of(name).items() if v >= 0.5}
+            row += "  " + (format_tres(usage) if usage else "(none)")
+        rows.append(row)
         for child in sorted(t.children(name), key=lambda c: c.name):
             walk(child.name, depth + 1)
 

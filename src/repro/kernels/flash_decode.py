@@ -125,3 +125,107 @@ def flash_decode_bkgd(q, k, v, pos, *, block_k: int = DEFAULT_BLOCK_K,
     den = jnp.sum(l_part * w, axis=2)                        # (B, K, G)
     den = jnp.where(den == 0.0, 1.0, den)
     return (num / den[..., None]).astype(q.dtype)
+
+
+# ----------------------------------------------------------- paged cache ----
+#
+# Same split-KV scheme against a PAGED pool: the KV lines live in
+# (num_pages, page_size) physical pages and each sequence's logical chunk
+# ``pi`` resolves through a scalar-prefetched page table.  The page table
+# rides in SMEM, so the *BlockSpec index_map itself* does the indirection —
+# grid cell (b, h, pi) DMAs physical page ``pt[b, pi]`` from HBM.  The
+# kernel body is the dense one: logical positions are ``pi*ps + iota``
+# regardless of which physical page backs them, so masking (and therefore
+# numerics) is identical to the dense split-KV kernel with block_k = ps.
+# Unallocated tails resolve to the null page and are fully masked.
+
+
+def _paged_decode_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, *, page_size: int, scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    pos = pos_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)               # (ps, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)               # (ps, Dh)
+    G = q.shape[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (G, ps)
+    kv_pos = pi * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (G, page_size), 1)
+    mask = kv_pos <= pos
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m = jnp.max(s, axis=-1)                           # (G,)
+    p = jnp.exp(s - m[:, None])
+    p = jnp.where(mask, p, 0.0)                       # fully-masked page: 0
+    l = jnp.sum(p, axis=-1)                           # (G,)
+    acc = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (G, Dh)
+
+    o_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged_bkgd(q, k, v, page_table, pos, *,
+                            interpret: bool = False):
+    """Split-KV decode against a paged pool.
+
+    q: (B, K, G, Dh) grouped queries; k/v: (K, num_pages, page_size, Dh)
+    pools; page_table: (B, n_pages) int32 (logical page -> physical page,
+    0 = null page); pos: (B,) int32 — sequence b attends logical KV
+    positions [0, pos_b].  Returns (B, K, G, Dh).
+
+    One grid cell per (sequence, kv head, logical page); each fetches its
+    physical page via the prefetched table and emits an online-softmax
+    partial, combined across pages in jnp exactly like the dense kernel.
+    """
+    B, K, G, Dh = q.shape
+    page_size = k.shape[2]
+    n_pages = page_table.shape[1]
+    scale = Dh ** -0.5
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=page_size,
+                               scale=scale)
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, K, n_pages),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, Dh),
+                             lambda b, h, pi, pt, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, page_size, Dh),
+                             lambda b, h, pi, pt, pos: (h, pt[b, pi], 0, 0)),
+                pl.BlockSpec((1, 1, page_size, Dh),
+                             lambda b, h, pi, pt, pos: (h, pt[b, pi], 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, G, Dh),
+                             lambda b, h, pi, pt, pos: (b, h, pi, 0, 0)),
+                pl.BlockSpec((1, 1, 1, G),
+                             lambda b, h, pi, pt, pos: (b, h, pi, 0)),
+                pl.BlockSpec((1, 1, 1, G),
+                             lambda b, h, pi, pt, pos: (b, h, pi, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, n_pages, G, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, n_pages, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, n_pages, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pos.astype(jnp.int32), q, k, v)
+
+    m_star = jnp.max(m_part, axis=2, keepdims=True)          # (B, K, 1, G)
+    w = jnp.exp(m_part - m_star)                             # (B, K, np, G)
+    num = jnp.sum(o_part * w[..., None], axis=2)             # (B, K, G, Dh)
+    den = jnp.sum(l_part * w, axis=2)                        # (B, K, G)
+    den = jnp.where(den == 0.0, 1.0, den)
+    return (num / den[..., None]).astype(q.dtype)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.flash_decode import flash_decode_bkgd
+from repro.kernels.flash_decode import flash_decode_bkgd, flash_decode_paged_bkgd
 from repro.kernels.ssd_scan import ssd_scan_bhsp
 
 
@@ -62,6 +62,27 @@ def flash_decode(q, k, v, pos, block_k: int = 512, interpret=None):
     kt = k.transpose(0, 2, 1, 3)                     # (B, K, S, Dh)
     vt = v.transpose(0, 2, 1, 3)
     o = flash_decode_bkgd(qg, kt, vt, pos, block_k=bk, interpret=interpret)
+    return o.reshape(B, H, Dh)[:, None]
+
+
+def flash_decode_paged(q, k, v, page_table, pos, interpret=None):
+    """Model-layout wrapper for paged single-query decode attention.
+
+    q: (B, 1, H, Dh) roped query; k/v: (num_pages, page_size, K, Dh)
+    shared page pool (H % K == 0); page_table: (B, n_pages) int32 mapping
+    logical to physical pages (0 = null page); pos: (B,) int32 — attends
+    logical positions [0, pos_b].  Returns (B, 1, H, Dh).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    B, _, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q[:, 0].reshape(B, K, G, Dh)                # grouped like the model
+    kt = k.transpose(2, 0, 1, 3)                     # (K, num_pages, ps, Dh)
+    vt = v.transpose(2, 0, 1, 3)
+    o = flash_decode_paged_bkgd(qg, kt, vt, page_table, pos,
+                                interpret=interpret)
     return o.reshape(B, H, Dh)[:, None]
 
 

@@ -54,6 +54,23 @@ def decode_attention_ref(q, k, v, pos):
     return o.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k, v, page_table, pos):
+    """Naive paged decode attention (the paged flash-decode oracle).
+
+    q: (B,1,H,Dh); k/v: (num_pages, page_size, K, Dh) shared pool;
+    page_table: (B, n_pages) int32 (0 = null page); pos: (B,) int32.
+    Gathers the logical (B, n_pages*page_size, K, Dh) view through the
+    page table, then defers to :func:`decode_attention_ref`.
+    """
+    B = q.shape[0]
+    n_pages = page_table.shape[1]
+    ps = k.shape[1]
+    K, Dh = k.shape[2], k.shape[3]
+    kd = k[page_table].reshape(B, n_pages * ps, K, Dh)
+    vd = v[page_table].reshape(B, n_pages * ps, K, Dh)
+    return decode_attention_ref(q, kd, vd, pos)
+
+
 def ssd_ref(x, dt, A, Bm, Cm):
     """Naive sequential SSD recurrence (token-by-token, exact).
 

@@ -48,6 +48,21 @@ def parse_buckets(spec: str):
     return tuple(int(p) for p in spec.split(",") if p.strip())
 
 
+def resolve_use_pallas(requested: bool, backend: str) -> bool:
+    """``--use-pallas`` with a graceful fallback: the split-KV decode
+    kernels are TPU-Pallas, so anywhere else (CPU would run them
+    interpreted — orders of magnitude slower than the jnp reference
+    path; other backends cannot lower them at all) the flag downgrades
+    with a warning instead of tanking the deployment."""
+    if not requested:
+        return False
+    if backend != "tpu":
+        print(f"[serve] --use-pallas: backend is {backend!r}, not TPU — "
+              "falling back to the reference decode path")
+        return False
+    return True
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--arch", default="stablelm-3b", choices=ARCH_IDS)
@@ -66,6 +81,17 @@ def main(argv=None) -> int:
                     help="'auto' (power-of-two), 'off', or comma lengths "
                          "e.g. 32,64,128 — prompts pad to the next bucket "
                          "so prefill compiles once per bucket")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route decode attention through the Pallas "
+                         "split-KV flash-decode kernel (falls back to the "
+                         "reference path on CPU-only backends)")
+    ap.add_argument("--kv-paging", type=int, default=0, metavar="PAGE_SIZE",
+                    help="paged KV cache with PAGE_SIZE-line pages "
+                         "(0 = dense per-slot cache); short requests then "
+                         "share HBM instead of pinning cache-len lines")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="page-pool size override (default: dense-budget "
+                         "equivalent, slots*cache_len/page_size + null)")
     ap.add_argument("--tenants", default="",
                     help="tenant:shares list, e.g. alice:8,bob:1 "
                          "(empty: single default tenant)")
@@ -73,6 +99,10 @@ def main(argv=None) -> int:
                     help="shares for --tenants given as bare names, "
                          "e.g. --tenants alice,bob --shares 8,1")
     args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs.base import RunConfig
 
     cfg = (get_reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
@@ -83,12 +113,16 @@ def main(argv=None) -> int:
     admission = AdmissionController()
     for name, share in tenants.items():
         admission.add_tenant(name, shares=share)
+    use_pallas = resolve_use_pallas(args.use_pallas, jax.default_backend())
     engine = DecodeEngine(cfg, params, num_slots=args.slots,
                           cache_len=args.cache_len, metrics=metrics,
                           admission=admission,
+                          run=RunConfig(remat="none", use_pallas=use_pallas),
                           decode_chunk=args.decode_chunk,
                           fused=not args.no_fused,
-                          prefill_buckets=parse_buckets(args.prefill_buckets))
+                          prefill_buckets=parse_buckets(args.prefill_buckets),
+                          kv_page_size=args.kv_paging,
+                          kv_pages=args.kv_pages)
     rng = np.random.default_rng(args.seed)
     names = list(tenants)
     for rid in range(args.requests):
@@ -110,6 +144,12 @@ def main(argv=None) -> int:
     if engine.prefill_buckets:
         print(f"prefill buckets {engine.prefill_buckets}: "
               f"{engine.prefill_compilations()} compilations")
+    if engine.paging is not None:
+        print(f"paged KV: {engine.paging.page_size}-line pages, pool "
+              f"{engine.paging.usable_pages} pages "
+              f"(high-water {engine.allocator.high_water}, "
+              f"{int(metrics.counter('serve_page_starvations').value())} "
+              f"starvation requeues)")
     if len(names) > 1 and total:
         tok = metrics.counter(METRIC_SERVE_TENANT_TOKENS)
         parts = []

@@ -7,10 +7,12 @@ from repro.models.model import (
     loss_fn,
     prefill,
 )
+from repro.models.paging import PageAllocator, PagedKVConfig, pages_for
 from repro.models.spec import count_params, model_spec
 
 __all__ = [
     "abstract_params", "init_params", "param_bytes", "input_specs",
     "make_batch", "decode_step", "forward_train", "init_cache", "loss_fn",
-    "prefill", "count_params", "model_spec",
+    "prefill", "count_params", "model_spec", "PageAllocator",
+    "PagedKVConfig", "pages_for",
 ]

@@ -168,14 +168,26 @@ def attention_train(p: dict, x: jax.Array, cfg: ModelConfig,
 # ---------------------------------------------------------------- decode ----
 
 def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, n_groups: int,
-                  dtype=jnp.bfloat16, abstract: bool = False):
+                  dtype=jnp.bfloat16, abstract: bool = False, paging=None):
     """Stacked (over scan groups) KV cache for one attention sublayer slot.
 
     For sliding-window configs the cache has ``window`` slots (ring buffer);
     otherwise ``cache_len`` slots.
+
+    ``paging`` (a :class:`repro.models.paging.PagedKVConfig`) switches the
+    layout from dense per-slot lines ``(G, B, slots, K, Dh)`` to one shared
+    page pool ``(G, num_pages, page_size, K, Dh)``: requests address it
+    through a per-slot page table instead of a batch index, so the pool is
+    sized to the HBM budget rather than ``batch * cache_len``.  Callers
+    that indexed the cache by batch must go through the page table in this
+    mode (see README "Paged KV cache" migration note).
     """
-    slots = min(cache_len, cfg.sliding_window or cache_len)
-    shape = (n_groups, batch, slots, cfg.num_kv_heads, cfg.head_dim)
+    if paging is not None:
+        shape = (n_groups, paging.num_pages, paging.page_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+    else:
+        slots = min(cache_len, cfg.sliding_window or cache_len)
+        shape = (n_groups, batch, slots, cfg.num_kv_heads, cfg.head_dim)
     if abstract:
         arr = jax.ShapeDtypeStruct(shape, dtype)
         return {"k": arr, "v": arr}
@@ -265,4 +277,65 @@ def attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     logits = jnp.where(valid[:, None, None, None, :], logits, _NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     o = jnp.einsum("bkgqs,bskd->bqkgd", probs, cv).reshape(B, 1, H, Dh)
+    return out_proj(p, constrain(o, "heads")), {"k": ck, "v": cv}
+
+
+def attention_decode_paged(p: dict, x: jax.Array, cache: dict,
+                           pos: jax.Array, page_table: jax.Array,
+                           cfg: ModelConfig, use_pallas: bool = False):
+    """One-token decode against a paged KV pool.
+
+    x: (B,1,d); cache k/v: (num_pages, page_size, K, Dh) — the shared
+    pool, NOT per-batch; page_table: (B, pages_per_seq) int32 mapping each
+    sequence's logical page j to a physical pool page (entry 0 = the null
+    page for unallocated tails); pos: scalar or (B,) int32 absolute
+    position of the new token.
+
+    The new K/V line lands at physical ``(page_table[b, pos//ps],
+    pos % ps)``; attention gathers the pool through the page table into a
+    (B, pages_per_seq*ps, K, Dh) logical view and then runs exactly the
+    dense full-cache math — masked logits are the same array the dense
+    path produces, so greedy decode is bit-identical to the dense cache
+    (pool garbage beyond ``pos`` is masked to the same ``_NEG_INF``).
+
+    Full-attention only: the paged pool has no ring layout, so callers
+    gate ``sliding_window`` configs to the dense path.
+
+    Returns (out (B,1,d), updated cache).
+    """
+    assert cfg.sliding_window is None, "paged KV is full-attention only"
+    B = x.shape[0]
+    ps = cache["k"].shape[1]
+    q, k, v = qkv_proj(p, x, cfg)                     # (B,1,H/K,Dh)
+    posv = jnp.broadcast_to(pos, (B,)).astype(jnp.int32)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, posv[:, None], cfg.rope_theta)
+        k = apply_rope(k, posv[:, None], cfg.rope_theta)
+    bidx = jnp.arange(B)
+    page = page_table[bidx, posv // ps]               # (B,) physical page
+    off = posv % ps
+    # live slots own disjoint pages; dead/frozen slots all target the null
+    # page, whose contents are never read unmasked
+    ck = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype))
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+        o = kops.flash_decode_paged(q, ck, cv, page_table, posv)
+        return out_proj(p, constrain(o, "heads")), {"k": ck, "v": cv}
+
+    H, Dh = q.shape[2], q.shape[3]
+    K = ck.shape[2]
+    G = H // K
+    n_pages = page_table.shape[1]
+    qg = q.reshape(B, 1, K, G, Dh)
+    # gather the logical view: (B, n_pages*ps, K, Dh)
+    kd = ck[page_table].reshape(B, n_pages * ps, K, Dh)
+    vd = cv[page_table].reshape(B, n_pages * ps, K, Dh)
+    valid = jnp.arange(n_pages * ps)[None, :] <= posv[:, None]
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kd).astype(jnp.float32)
+    logits = logits * (Dh ** -0.5)
+    logits = jnp.where(valid[:, None, None, None, :], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, vd).reshape(B, 1, H, Dh)
     return out_proj(p, constrain(o, "heads")), {"k": ck, "v": cv}

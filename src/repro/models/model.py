@@ -168,8 +168,15 @@ def loss_fn(params, batch: dict, cfg: ModelConfig, run: RunConfig):
 # ----------------------------------------------------------------- cache ----
 
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
-               abstract: bool = False):
-    """Decode cache pytree: one entry per sublayer slot, stacked over groups."""
+               abstract: bool = False, paging=None):
+    """Decode cache pytree: one entry per sublayer slot, stacked over groups.
+
+    ``paging`` (a :class:`repro.models.paging.PagedKVConfig`) makes every
+    attention sublayer a shared page pool instead of ``batch`` dense rows;
+    decode must then pass the matching ``page_table``.  Paged mode is
+    full-attention only (SSM state is not line-addressable), so callers
+    gate on ``cfg.ssm is None``.
+    """
     P = group_period(cfg)
     n_groups = cfg.num_layers // P
     sched = layer_schedule(cfg)[:P]
@@ -177,21 +184,25 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
     for mixer, _ in sched:
         if mixer == "attn":
             layers.append(A.init_kv_cache(cfg, batch, cache_len, n_groups,
-                                          abstract=abstract))
+                                          abstract=abstract, paging=paging))
         else:
+            assert paging is None, "paged KV cache is attention-only"
             layers.append(SSM.init_ssm_cache(cfg, batch, n_groups,
                                              abstract=abstract))
     return {"layers": layers}
 
 
-def cache_logical_axes(cfg: ModelConfig):
+def cache_logical_axes(cfg: ModelConfig, paging: bool = False):
     """Logical axes pytree matching ``init_cache`` (see core/sharding.py)."""
     P = group_period(cfg)
     sched = layer_schedule(cfg)[:P]
     layers = []
     for mixer, _ in sched:
         if mixer == "attn":
-            ax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+            # paged pools have no batch dim: pages replace (batch, seq)
+            ax = (("layers", None, "cache_seq", "kv_heads", "head_dim")
+                  if paging else
+                  ("layers", "batch", "cache_seq", "kv_heads", "head_dim"))
             layers.append({"k": ax, "v": ax})
         else:
             layers.append({
@@ -269,10 +280,13 @@ def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,
 
 # ----------------------------------------------------------------- decode ----
 
-def decode_step(params, cache, token, pos, cfg: ModelConfig, run: RunConfig):
+def decode_step(params, cache, token, pos, cfg: ModelConfig, run: RunConfig,
+                page_table=None):
     """One decoding step.  token: (B, 1) int32; pos: scalar int32 OR (B,)
     int32 (0-based absolute position of each new token — vector form for
-    continuous batching).  Returns (logits (B,1,V), new cache)."""
+    continuous batching).  ``page_table`` ((B, n_pages) int32) routes
+    attention through the paged KV pool instead of dense per-slot rows.
+    Returns (logits (B,1,V), new cache)."""
     P = group_period(cfg)
     sched = layer_schedule(cfg)[:P]
     B = token.shape[0]
@@ -289,9 +303,14 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig, run: RunConfig):
             p = group_params[i]
             hh = rmsnorm(x, p["norm1"]["scale"], cfg.norm_eps)
             if mixer == "attn":
-                hh, c = A.attention_decode(p["attn"], hh, group_cache[i],
-                                           pos, cfg,
-                                           use_pallas=run.use_pallas)
+                if page_table is not None:
+                    hh, c = A.attention_decode_paged(
+                        p["attn"], hh, group_cache[i], pos, page_table,
+                        cfg, use_pallas=run.use_pallas)
+                else:
+                    hh, c = A.attention_decode(p["attn"], hh, group_cache[i],
+                                               pos, cfg,
+                                               use_pallas=run.use_pallas)
             else:
                 hh, c = SSM.ssm_decode(p["ssm"], hh, group_cache[i], cfg)
             x = constrain(x + hh, "hidden")
@@ -342,7 +361,7 @@ def sample_tokens(key, logits, temps):
 
 def decode_n(params, cache, token, pos, remaining, done, eos, temps, key,
              cfg: ModelConfig, run: RunConfig, num_tokens: int,
-             cache_len: int):
+             cache_len: int, page_table=None, limit=None):
     """Generate up to ``num_tokens`` tokens per slot in ONE dispatch.
 
     A ``lax.scan`` over ``decode_step`` with sampling and stop handling
@@ -366,15 +385,22 @@ def decode_n(params, cache, token, pos, remaining, done, eos, temps, key,
       eos (B,) int32     per-slot EOS id, -1 = none
       temps (B,) float32 per-slot sampling temperature, 0 = greedy
       key                PRNG key (consumed; the advanced key is returned)
+      page_table (B, n_pages) int32, optional — paged-KV routing
+      limit (B,) int32, optional — per-slot cache capacity (paged mode:
+        ``allocated_pages * page_size``, so a slot freezes at its own
+        allocation boundary instead of the global ``cache_len``; None
+        keeps the dense scalar boundary, bit-identical to before)
 
     Returns ``(tokens (B, N), cache, token, pos, remaining, done, key)``;
     per slot the first ``new_pos - old_pos`` entries of ``tokens`` are
     real, the rest pad.
     """
+    boundary = (cache_len - 1) if limit is None else (limit - 1)
+
     def body(carry, _):
         cache, tok, pos, rem, done, key = carry
         logits, cache = decode_step(params, cache, tok[:, None], pos, cfg,
-                                    run)
+                                    run, page_table=page_table)
         key, sub = jax.random.split(key)
         nxt = sample_tokens(sub, logits[:, 0], temps)
         live = jnp.logical_not(done)
@@ -383,7 +409,7 @@ def decode_n(params, cache, token, pos, remaining, done, eos, temps, key,
         new_rem = jnp.where(live, rem - 1, rem)
         hit_eos = (eos >= 0) & (nxt == eos)
         new_done = done | (live & (hit_eos | (new_rem <= 0)
-                                   | (new_pos >= cache_len - 1)))
+                                   | (new_pos >= boundary)))
         new_tok = jnp.where(live, nxt, tok)
         return (cache, new_tok, new_pos, new_rem, new_done, key), emit
 

@@ -1,0 +1,113 @@
+"""Paged KV cache: the page-table memory manager behind the serving engine.
+
+The dense decode cache pins ``cache_len`` KV lines per slot for a request's
+whole lifetime — a short request strands HBM exactly the way an idle node
+strands a SLURM partition.  Paging (vLLM's PagedAttention) breaks the cache
+into fixed-size *pages* drawn from one device-resident pool:
+
+* **pool** — ``(n_groups, num_pages, page_size, K, Dh)`` per attention
+  sublayer, allocated once (``models.attention.init_kv_cache(paging=...)``);
+* **page table** — per-slot ``(pages_per_seq,)`` int32 mapping logical page
+  ``j`` (KV lines ``[j*page_size, (j+1)*page_size)``) to a physical page in
+  the pool, shared by every layer/group (each layer has its own pool but
+  the same logical allocation);
+* **allocator** (this module, host-side) — free-list with all-or-nothing
+  grants, on-demand growth at decode-time page boundaries, and
+  eviction-aware reclaim (the engine frees a preempted victim's pages back
+  here before retrying a blocked allocation).
+
+Physical page 0 is the **null page**: never granted, it backs unallocated
+page-table entries so frozen/dead slots have a harmless in-bounds write
+target inside jitted decode chunks.  Its contents are garbage by design
+and are always masked out of attention.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+#: physical page id backing every unallocated page-table entry
+NULL_PAGE = 0
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` KV lines (ceil division)."""
+    return -(-int(tokens) // int(page_size)) if tokens > 0 else 0
+
+
+@dataclass(frozen=True)
+class PagedKVConfig:
+    """Shape of one paged cache pool.
+
+    ``num_pages`` counts the null page, so usable capacity is
+    ``(num_pages - 1) * page_size`` KV lines.
+    """
+    page_size: int                 # KV lines per page
+    num_pages: int                 # physical pages in the pool (incl. null)
+    pages_per_seq: int             # logical pages per request (= page-table width)
+
+    def __post_init__(self):
+        assert self.page_size >= 1
+        assert self.num_pages >= 2, "pool needs the null page + 1 usable page"
+        assert self.pages_per_seq >= 1
+
+    @property
+    def usable_pages(self) -> int:
+        return self.num_pages - 1
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.usable_pages * self.page_size
+
+    @classmethod
+    def for_budget(cls, budget_tokens: int, page_size: int,
+                   cache_len: int) -> "PagedKVConfig":
+        """Pool sized to a dense-equivalent HBM budget of
+        ``budget_tokens`` KV lines (plus the null page)."""
+        assert cache_len % page_size == 0, (cache_len, page_size)
+        return cls(page_size=page_size,
+                   num_pages=pages_for(budget_tokens, page_size) + 1,
+                   pages_per_seq=cache_len // page_size)
+
+
+class PageAllocator:
+    """Host-side free-list over the physical pages of one pool.
+
+    Grants are **all-or-nothing**: a request that needs ``n`` pages either
+    gets ``n`` or ``None``, so a half-grown request never wedges the pool.
+    Page 0 (the null page) is reserved and never granted.
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, num_pages
+        self.num_pages = num_pages
+        # LIFO free list: recently-freed pages are re-granted first, which
+        # keeps the hot working set of physical pages small
+        self._free = list(range(num_pages - 1, NULL_PAGE, -1))
+        self._in_use = 0
+        self.high_water = 0
+
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self._in_use
+
+    def alloc(self, n: int):
+        """Grant ``n`` pages or None (all-or-nothing)."""
+        if n <= 0:
+            return []
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._in_use += n
+        self.high_water = max(self.high_water, self._in_use)
+        return pages
+
+    def free(self, pages):
+        """Return pages to the pool (idempotence is the caller's job)."""
+        for p in pages:
+            assert NULL_PAGE < p < self.num_pages, p
+            self._free.append(p)
+        self._in_use -= len(pages)
+        assert self._in_use >= 0, self._in_use

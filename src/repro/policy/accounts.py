@@ -48,6 +48,32 @@ class AccountTree:
         assert account in self.accounts, f"unknown account {account!r}"
         self.user_account[user] = account
 
+    def modify_account(self, name: str, shares: Optional[int] = None,
+                       parent: Optional[str] = None,
+                       description: Optional[str] = None) -> Account:
+        """``sacctmgr modify account <name> set fairshare=<n> [parent=<p>]``
+        on a live tree.  Normalized shares are computed on read, so every
+        priority/sshare pass after this sees the new values — no restart,
+        exactly like SLURM's live association edits.  Reparenting refuses
+        cycles (an account may not move under its own subtree)."""
+        assert name in self.accounts, f"unknown account {name!r}"
+        assert name != "root", "cannot modify the root association"
+        acct = self.accounts[name]
+        if shares is not None:
+            assert shares >= 1, shares
+            acct.shares = shares
+        if parent is not None:
+            assert parent in self.accounts, f"unknown parent {parent!r}"
+            ancestor = parent
+            while ancestor is not None:
+                assert ancestor != name, \
+                    f"reparenting {name!r} under its own subtree"
+                ancestor = self.accounts[ancestor].parent
+            acct.parent = parent
+        if description is not None:
+            acct.description = description
+        return acct
+
     def account_of(self, user: str, default: str = "root") -> str:
         return self.user_account.get(user, default)
 

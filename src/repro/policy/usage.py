@@ -38,6 +38,11 @@ class FairShareTree(AccountTree):
         self.half_life_s = half_life_s
         self.tres_weights = dict(tres_weights or DEFAULT_TRES_WEIGHTS)
         self.usage: dict[str, float] = {"root": 0.0}
+        # per-TRES-key raw consumption (same decay as ``usage``): what a
+        # tenant actually burned, before billing weights — e.g.
+        # ``gres/kv_page`` here is true HBM page-steps held, which is how
+        # ``sshare --tres`` reports paged-cache residency per tenant
+        self.tres_usage: dict[str, dict[str, float]] = {}
         self._last_decay: float = 0.0
         self._clock: Optional[Callable[[], float]] = None
 
@@ -79,6 +84,9 @@ class FairShareTree(AccountTree):
         factor = 2.0 ** (-dt / self.half_life_s)
         for name in self.usage:
             self.usage[name] *= factor
+        for per_key in self.tres_usage.values():
+            for key in per_key:
+                per_key[key] *= factor
         self._last_decay = now
 
     def tres_cost_per_s(self, req) -> float:
@@ -109,7 +117,18 @@ class FairShareTree(AccountTree):
                      for key, amt in tres.items()) * usage_factor
         for acct in self._ancestors(account):
             self.usage[acct.name] = self.usage.get(acct.name, 0.0) + amount
+            per_key = self.tres_usage.setdefault(acct.name, {})
+            for key, amt in tres.items():
+                if amt:
+                    # raw, UNdiscounted: usage_factor is a billing break,
+                    # not a consumption reduction — an auditor reading
+                    # sshare --tres must see what was actually held
+                    per_key[key] = per_key.get(key, 0.0) + amt
         return amount
+
+    def tres_usage_of(self, account: str) -> dict:
+        """Decayed raw per-key TRES consumption of one account."""
+        return dict(self.tres_usage.get(account, {}))
 
     def charge(self, account: str, req, elapsed_s: float, now: float,
                usage_factor: float = 1.0) -> float:
@@ -147,6 +166,7 @@ class FairShareTree(AccountTree):
                          for a in self.accounts.values()],
             "user_account": dict(self.user_account),
             "usage": dict(self.usage),
+            "tres_usage": {k: dict(v) for k, v in self.tres_usage.items()},
             "last_decay": self._last_decay,
         }
 
@@ -161,5 +181,7 @@ class FairShareTree(AccountTree):
                                        description=desc)
         t.user_account = dict(snap["user_account"])
         t.usage = dict(snap["usage"])
+        t.tres_usage = {k: dict(v)
+                        for k, v in snap.get("tres_usage", {}).items()}
         t._last_decay = snap["last_decay"]
         return t

@@ -59,9 +59,18 @@ SERVING_TRES_WEIGHTS = {
     "tokens": 1.0,            # one generated token
     "gres/kv_token": 0.001,   # one KV-cache line resident for one step
 }
+# "gres/kv_page" (one KV page resident for one step) is deliberately NOT
+# defaulted here: its fair rate is page_size * kv_token, so the paged
+# engine setdefaults it from its own page size at attach — an operator
+# value set beforehand always wins, and engines sharing one ledger
+# should share one page size (or set the weight explicitly).
 
 #: TRES key for concurrent decode slots (GrpTRES caps, e.g. {"slots": 2}).
 TRES_SLOTS = "slots"
+
+#: TRES key for concurrently-held KV pages (paged engine GrpTRES caps,
+#: e.g. ``{"kv_pages": 8}`` — a direct lid on a tenant's HBM residency).
+TRES_KV_PAGES = "kv_pages"
 
 
 @dataclass
@@ -74,10 +83,16 @@ class Tenant:
     # decode slots currently held, keyed by QOS — GrpTRES caps are
     # per-(account, QOS), matching the batch scheduler's accounting
     slots_by_qos: dict = field(default_factory=dict)
+    # KV pages currently held, keyed by QOS (paged engine only)
+    pages_by_qos: dict = field(default_factory=dict)
 
     @property
     def slots_held(self) -> int:
         return sum(self.slots_by_qos.values())
+
+    @property
+    def pages_held(self) -> int:
+        return sum(self.pages_by_qos.values())
 
 
 class AdmissionController:
@@ -170,9 +185,13 @@ class AdmissionController:
         qos = self.qos_table.get(req.qos)
         if qos is None or not qos.grp_tres:
             return False
-        held = float(tenant.slots_by_qos.get(req.qos, 0))
-        return not tres_within({TRES_SLOTS: held}, {TRES_SLOTS: 1.0},
-                               qos.grp_tres)
+        held = {TRES_SLOTS: float(tenant.slots_by_qos.get(req.qos, 0)),
+                TRES_KV_PAGES: float(tenant.pages_by_qos.get(req.qos, 0))}
+        # _est_pages: the paged engine stamps its page estimate on submit;
+        # dense mode leaves it 0 so only the slot cap binds
+        ask = {TRES_SLOTS: 1.0,
+               TRES_KV_PAGES: float(getattr(req, "_est_pages", 0))}
+        return not tres_within(held, ask, qos.grp_tres)
 
     def _best_tenant(self, eligible=None) -> Optional[Tenant]:
         self.tree.tick()                   # wall-clock decay, if enabled
@@ -187,11 +206,17 @@ class AdmissionController:
                 best, best_key = t, key
         return best
 
-    def next_request(self):
+    def next_request(self, eligible=None):
         """Pop the next request to admit, or None (all queues empty or
         capped).  The caller owns the slot; the tenant's GrpTRES slot
-        hold is taken here and returned by :meth:`release`."""
-        t = self._best_tenant()
+        hold is taken here and returned by :meth:`release`.
+
+        ``eligible`` (optional predicate over the head request) lets the
+        engine veto picks it cannot place right now — the paged engine
+        passes "does the prefill fit the free page pool", so a big
+        blocked request does not starve admissible small ones.
+        """
+        t = self._best_tenant(eligible=eligible)
         if t is None:
             return None
         req = t.queue.pop(0)
@@ -205,7 +230,30 @@ class AdmissionController:
             t.slots_by_qos[req.qos] = max(
                 t.slots_by_qos.get(req.qos, 0) - 1, 0)
 
+    def adjust_pages(self, req, delta: int):
+        """Track a tenant's reserved KV pages for the ``kv_pages``
+        GrpTRES cap.  The paged engine reserves a request's WORST-CASE
+        footprint (``_est_pages``) for its whole slot residency and
+        returns it on finish/evict — decode-time growth is pre-paid, so
+        a tenant can never grow past its cap."""
+        t = self.tenants.get(req.tenant)
+        if t is not None:
+            t.pages_by_qos[req.qos] = max(
+                t.pages_by_qos.get(req.qos, 0) + delta, 0)
+
     # -------------------------------------------------------- preemption ----
+    def pick_victim(self, candidates: list):
+        """The ONE eviction-victim rule, shared by QOS preemption and the
+        paged engine's pool-exhaustion reclaim: lowest QOS priority
+        first, ties toward the worst fair-share standing, then the most
+        recent admission.  Callers pass only candidates the preemptor's
+        QOS may evict."""
+        def vkey(r):
+            vq = self.qos_table.get(r.qos)
+            return (vq.priority if vq else 0,
+                    self.tree.fair_share_factor(r.tenant), -r._seq)
+        return min(candidates, key=vkey)
+
     def next_preempting(self, running: list):
         """Pop the best queued request whose QOS may evict one of
         ``running``, and pick its victim: ``(request, victim)`` or None.
@@ -232,22 +280,21 @@ class AdmissionController:
             return None
         head = t.queue[0]
         qos = self.qos_table[head.qos]
-        victims = [r for r in running if qos.can_preempt(r.qos)]
-
-        def vkey(r):
-            vq = self.qos_table.get(r.qos)
-            return (vq.priority if vq else 0,
-                    self.tree.fair_share_factor(r.tenant), -r._seq)
-        victim = min(victims, key=vkey)
+        victim = self.pick_victim(
+            [r for r in running if qos.can_preempt(r.qos)])
         t.queue.pop(0)
         t.slots_by_qos[head.qos] = t.slots_by_qos.get(head.qos, 0) + 1
         return head, victim
 
     # ---------------------------------------------------------- charging ----
-    def charge(self, req, tokens: int = 0, kv_tokens: int = 0) -> float:
+    def charge(self, req, tokens: int = 0, kv_tokens: int = 0,
+               kv_pages: int = 0) -> float:
         """Charge generated tokens and/or KV-cache residency to the
         request's tenant in the shared ledger (QOS usage_factor applied,
         so scavenger tokens are discounted like scavenger job-seconds).
+        Dense engines bill residency in ``kv_tokens`` (lines x steps);
+        the paged engine bills ``kv_pages`` (pages x steps) — actual HBM
+        held, so a short request stops paying for cache it never pinned.
 
         No decay advance unless ``wall_clock_decay`` was enabled: the
         ledger's clock is driven by whoever owns it (the cluster's event
@@ -258,26 +305,33 @@ class AdmissionController:
         qos = self.qos_table.get(req.qos)
         return self.tree.charge_tres(
             req.tenant,
-            {"tokens": float(tokens), "gres/kv_token": float(kv_tokens)},
+            {"tokens": float(tokens), "gres/kv_token": float(kv_tokens),
+             "gres/kv_page": float(kv_pages)},
             usage_factor=qos.usage_factor if qos else 1.0)
 
     def charge_bulk(self, charges) -> float:
         """Charge a chunk's worth of consumption in one pass: ``charges``
-        is an iterable of ``(req, tokens, kv_tokens)``.  Grouped by
-        (tenant, QOS) before hitting the ledger, so the fused decode
-        engine pays O(tenants) ledger writes per chunk regardless of slot
-        count or chunk length.  Returns the total charged amount."""
+        is an iterable of ``(req, tokens, kv_tokens)`` or
+        ``(req, tokens, kv_tokens, kv_pages)``.  Grouped by (tenant, QOS)
+        before hitting the ledger, so the fused decode engine pays
+        O(tenants) ledger writes per chunk regardless of slot count or
+        chunk length.  Returns the total charged amount."""
         self.tree.tick()
         grouped: dict[tuple, list[float]] = {}
-        for req, tokens, kv_tokens in charges:
-            acc = grouped.setdefault((req.tenant, req.qos), [0.0, 0.0])
+        for entry in charges:
+            req, tokens, kv_tokens = entry[0], entry[1], entry[2]
+            kv_pages = entry[3] if len(entry) > 3 else 0
+            acc = grouped.setdefault((req.tenant, req.qos), [0.0, 0.0, 0.0])
             acc[0] += tokens
             acc[1] += kv_tokens
+            acc[2] += kv_pages
         total = 0.0
-        for (tenant, qos_name), (tokens, kv_tokens) in grouped.items():
+        for (tenant, qos_name), (tokens, kv_tokens, kv_pages) in \
+                grouped.items():
             qos = self.qos_table.get(qos_name)
             total += self.tree.charge_tres(
                 tenant,
-                {"tokens": tokens, "gres/kv_token": kv_tokens},
+                {"tokens": tokens, "gres/kv_token": kv_tokens,
+                 "gres/kv_page": kv_pages},
                 usage_factor=qos.usage_factor if qos else 1.0)
         return total

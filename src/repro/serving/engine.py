@@ -30,6 +30,22 @@ slot caps, QOS preemption (a blocked high request evicts one scavenger
 slot; the victim requeues with its partial output retained and resumes
 exactly where it stopped), and per-chunk batched ledger charges are all
 O(tenants) Python per chunk.
+
+**Paged KV cache** (``kv_page_size > 0``, opt-in): instead of pinning
+``cache_len`` dense lines per slot, all slots share one device page pool
+(``models.paging``).  A request holds exactly ``ceil(tokens/page_size)``
+pages, grows one page at a time at decode-time page boundaries (the host
+pre-allocates each chunk's worth before dispatch), and frees everything
+back to the pool on finish/evict — so the same HBM budget serves far
+more concurrent short requests.  Admission turns page-budget-aware: a
+request is only picked when its prefill fits the free pool, GrpTRES can
+cap ``kv_pages`` per tenant, and the ledger bills ``kv_pages`` residency
+(true HBM held) instead of dense ``kv_tokens``.  Pool exhaustion at
+growth time triggers the same one-victim scavenger eviction QOS
+preemption uses; if nothing is evictable the starved slot truncates at
+its allocation boundary instead of corrupting neighbours.  Greedy fused
+decode is bit-identical to the dense cache (the gathered logical view
+feeds the exact same masked attention math).
 """
 from __future__ import annotations
 
@@ -45,12 +61,17 @@ import numpy as np
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import init_cache, prefill
 from repro.models.model import decode_n, decode_step
+from repro.models.paging import (
+    NULL_PAGE, PageAllocator, PagedKVConfig, pages_for,
+)
 from repro.monitoring import MetricsRegistry
 from repro.monitoring.metrics import (
     METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_TENANT_ADMITTED,
     METRIC_SERVE_TENANT_TOKENS,
 )
-from repro.serving.admission import AdmissionController
+from repro.serving.admission import (
+    SERVING_TRES_WEIGHTS, AdmissionController,
+)
 
 
 @dataclass
@@ -68,6 +89,7 @@ class Request:
     preemptions: int = 0               # times evicted mid-decode
     _seq: int = field(default=0, repr=False)   # admission arrival order
     _slot: int = field(default=-1, repr=False)  # current decode slot (-1 = none)
+    _est_pages: int = field(default=0, repr=False)  # paged: worst-case pages
 
 
 class DecodeEngine:
@@ -76,7 +98,9 @@ class DecodeEngine:
                  metrics: Optional[MetricsRegistry] = None, seed: int = 0,
                  admission: Optional[AdmissionController] = None,
                  decode_chunk: int = 1, fused: bool = True,
-                 prefill_buckets: Union[None, str, Sequence[int]] = None):
+                 prefill_buckets: Union[None, str, Sequence[int]] = None,
+                 kv_page_size: int = 0,
+                 kv_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.run = run or RunConfig(remat="none")
@@ -87,7 +111,22 @@ class DecodeEngine:
             else AdmissionController()
         self.decode_chunk = max(1, int(decode_chunk))
         self.fused = fused
-        self.cache = init_cache(cfg, num_slots, cache_len)
+        self.paging = self._resolve_paging(kv_page_size, kv_pages)
+        if self.paging is not None:
+            # one page bills like the lines it holds, keeping fair-share
+            # comparable across page sizes and with dense engines on the
+            # same ledger; setdefault so an operator-set weight wins
+            w = self.admission.tree.tres_weights
+            w.setdefault("gres/kv_page", self.paging.page_size *
+                         w.get("gres/kv_token",
+                               SERVING_TRES_WEIGHTS["gres/kv_token"]))
+            self.allocator = PageAllocator(self.paging.num_pages)
+            self.page_tables = np.full(
+                (num_slots, self.paging.pages_per_seq), NULL_PAGE, np.int32)
+            self._slot_pages: list[list[int]] = [[] for _ in
+                                                 range(num_slots)]
+        self.cache = init_cache(cfg, num_slots, cache_len,
+                                paging=self.paging)
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.pos = np.zeros(num_slots, np.int64)       # next position per slot
         self.last_tok = np.zeros(num_slots, np.int32)
@@ -99,9 +138,42 @@ class DecodeEngine:
         self._insert = self._build_insert()
         self._prefill_fn = self._build_prefill()
 
+    def _resolve_paging(self, kv_page_size: int,
+                        kv_pages: Optional[int]) -> Optional[PagedKVConfig]:
+        """Paged layout, or None (dense default).  Paging needs a cache
+        without position-dependent physical layout: full attention (no
+        SSM state to page) and no sliding-window ring.  ``kv_pages``
+        overrides the pool size; the default matches the dense HBM
+        budget (num_slots * cache_len lines) plus the null page, so
+        dense and paged engines are HBM-comparable out of the box."""
+        if not kv_page_size:
+            return None
+        attn_only = self.cfg.attn_every == 1 and self.cfg.ssm is None
+        if not attn_only or self.cfg.sliding_window is not None:
+            raise ValueError(
+                "kv_page_size: paged KV cache supports full-attention, "
+                "non-sliding-window configs only")
+        assert self.cache_len % kv_page_size == 0, \
+            (self.cache_len, kv_page_size)
+        if kv_pages is not None:
+            assert kv_pages >= 2, "pool needs the null page + 1 usable page"
+            return PagedKVConfig(page_size=kv_page_size, num_pages=kv_pages,
+                                 pages_per_seq=self.cache_len // kv_page_size)
+        return PagedKVConfig.for_budget(self.num_slots * self.cache_len,
+                                        kv_page_size, self.cache_len)
+
     # ------------------------------------------------------------ jitted ----
     def _build_step(self):
         cfg, run = self.cfg, self.run
+
+        if self.paging is not None:
+            @jax.jit
+            def step_paged(params, cache, token, pos, page_table):
+                logits, cache = decode_step(params, cache, token, pos, cfg,
+                                            run, page_table=page_table)
+                return logits[:, 0], cache
+
+            return step_paged
 
         @jax.jit
         def step(params, cache, token, pos):
@@ -115,6 +187,16 @@ class DecodeEngine:
         cfg, run = self.cfg, self.run
         chunk, cache_len = self.decode_chunk, self.cache_len
 
+        if self.paging is not None:
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def step_n_paged(params, cache, token, pos, remaining, done,
+                             eos, temps, key, page_table, limit):
+                return decode_n(params, cache, token, pos, remaining, done,
+                                eos, temps, key, cfg, run, chunk, cache_len,
+                                page_table=page_table, limit=limit)
+
+            return step_n_paged
+
         @functools.partial(jax.jit, donate_argnums=(1,))
         def step_n(params, cache, token, pos, remaining, done, eos, temps,
                    key):
@@ -124,6 +206,29 @@ class DecodeEngine:
         return step_n
 
     def _build_insert(self):
+        if self.paging is not None:
+            ps = self.paging.page_size
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def insert_paged(pool_cache, one_cache, page_ids):
+                # scatter the request's prefilled lines into its pages;
+                # pad-tail pages ride on the null page (id 0), whose
+                # garbage is never read unmasked
+                def put(pool_leaf, one_leaf):
+                    g, _, length = one_leaf.shape[:3]
+                    n = page_ids.shape[0]
+                    lines = one_leaf[:, 0]
+                    if n * ps > length:
+                        lines = jnp.pad(
+                            lines, ((0, 0), (0, n * ps - length),
+                                    (0, 0), (0, 0)))
+                    pages = lines.reshape(g, n, ps, *lines.shape[2:])
+                    return pool_leaf.at[:, page_ids].set(
+                        pages.astype(pool_leaf.dtype))
+                return jax.tree.map(put, pool_cache, one_cache)
+
+            return insert_paged
+
         @functools.partial(jax.jit, donate_argnums=(0,))
         def insert(batch_cache, one_cache, slot):
             def put(batch_leaf, one_leaf):
@@ -136,11 +241,15 @@ class DecodeEngine:
 
     def _build_prefill(self):
         cfg, run, cache_len = self.cfg, self.run, self.cache_len
+        # paged mode: prefill only materializes the prompt's own lines
+        # (cache_len=None -> S slots); the page scatter does the placement
+        paged = self.paging is not None
 
         @jax.jit
         def prefill_fn(params, tokens, last_pos):
             return prefill(params, {"tokens": tokens}, cfg, run,
-                           cache_len=cache_len, last_pos=last_pos)
+                           cache_len=None if paged else cache_len,
+                           last_pos=last_pos)
 
         return prefill_fn
 
@@ -186,7 +295,34 @@ class DecodeEngine:
         # which also guarantees a preemption victim's resume prefill
         # (prompt + partial output) still fits the cache
         assert len(req.prompt) < self.cache_len, "prompt exceeds cache"
+        if self.paging is not None:
+            # worst-case page footprint, for GrpTRES kv_pages caps
+            req._est_pages = pages_for(
+                min(len(req.prompt) + req.max_new_tokens + 1,
+                    self.cache_len), self.paging.page_size)
+            # a footprint the pool can never hold would queue forever
+            # (page-budget admission keeps vetoing it): refuse loudly
+            assert req._est_pages <= self.paging.usable_pages, \
+                (f"request {req.rid}: needs {req._est_pages} pages, pool "
+                 f"has {self.paging.usable_pages}")
         self.admission.submit(req)
+
+    def active(self) -> int:
+        """Requests currently holding a decode slot."""
+        return sum(r is not None for r in self.slots)
+
+    def _capacity(self, slot: int) -> int:
+        """KV lines slot may write before growing (paged) / cache_len."""
+        if self.paging is None:
+            return self.cache_len
+        return len(self._slot_pages[slot]) * self.paging.page_size
+
+    def _fits_pages(self, req) -> bool:
+        """Page-budget admission predicate: the resume/prefill pages must
+        fit the free pool right now (decode growth is handled later)."""
+        toks = len(req.prompt) + max(len(req.output) - 1, 0)
+        return pages_for(toks, self.paging.page_size) \
+            <= self.allocator.available()
 
     def pending(self) -> int:
         return self.admission.pending()
@@ -201,9 +337,12 @@ class DecodeEngine:
 
     def _admit(self):
         """Fill free slots from the admission controller; then let blocked
-        high-QOS requests preempt one preemptable slot each."""
+        high-QOS requests preempt one preemptable slot each.  In paged
+        mode the pick is additionally gated on the prefill fitting the
+        free page pool (page-budget admission)."""
+        eligible = self._fits_pages if self.paging is not None else None
         for slot in self._free_slots():
-            req = self.admission.next_request()
+            req = self.admission.next_request(eligible=eligible)
             if req is None:
                 return
             self._prefill_into(slot, req)
@@ -221,12 +360,27 @@ class DecodeEngine:
     def _prefill_into(self, slot: int, req: Request):
         """Prefill a request into a free slot.  A preempted request
         resumes: its prompt *and* retained partial output are prefilled,
-        so decode continues from exactly where the eviction stopped."""
+        so decode continues from exactly where the eviction stopped.
+
+        Paged mode allocates exactly ``ceil(len(toks)/page_size)`` pages
+        first (the bucketed pad tail allocates and charges NOTHING — it
+        scatters onto the null page) and bails back to the queue if the
+        pool cannot hold the prefill."""
         if req.output:
             toks = np.concatenate(
                 [req.prompt, np.asarray(req.output[:-1], np.int32)])
         else:
             toks = np.asarray(req.prompt, np.int32)
+        pages = None
+        if self.paging is not None:
+            pages = self.allocator.alloc(
+                pages_for(len(toks), self.paging.page_size))
+            if pages is None:
+                # preemption admitted past the page gate but the pool
+                # still can't hold the prefill: back to the queue
+                self.admission.release(req)
+                self.admission.requeue(req)
+                return
         with_timer = self.metrics.histogram(
             "serve_prefill_seconds", "prefill latency")
         t0 = time.perf_counter()
@@ -240,15 +394,33 @@ class DecodeEngine:
                     self.params, jnp.asarray(padded)[None],
                     jnp.asarray(P - 1, jnp.int32))
             else:
+                L = len(toks)
                 prompt = jnp.asarray(toks, jnp.int32)[None]
                 logits, cache1 = prefill(
                     self.params, {"tokens": prompt}, self.cfg, self.run,
-                    cache_len=self.cache_len)
+                    cache_len=None if self.paging is not None
+                    else self.cache_len)
         finally:
             with_timer.observe(time.perf_counter() - t0)
-        # write this request's cache slice into the batch cache through
-        # the pre-jitted donated insert (one compile, zero retraces)
-        self.cache = self._insert(self.cache, cache1, slot)
+        if self.paging is not None:
+            # scatter the prefilled lines into the allocated pages; the
+            # bucketed pad tail's pages are the null page
+            ps = self.paging.page_size
+            page_ids = np.full(pages_for(L, ps), NULL_PAGE, np.int32)
+            page_ids[:len(pages)] = pages
+            self.cache = self._insert(self.cache, cache1,
+                                      jnp.asarray(page_ids))
+            self.page_tables[slot] = NULL_PAGE
+            self.page_tables[slot, :len(pages)] = pages
+            self._slot_pages[slot] = pages
+            # GrpTRES holds the request's WORST-CASE footprint for its
+            # whole residency (SLURM-style reservation): decode growth
+            # then cannot push a tenant past its kv_pages cap
+            self.admission.adjust_pages(req, req._est_pages)
+        else:
+            # write this request's cache slice into the batch cache through
+            # the pre-jitted donated insert (one compile, zero retraces)
+            self.cache = self._insert(self.cache, cache1, slot)
         if req.output:
             tok = int(req.output[-1])      # resume: last token re-decodes
         else:
@@ -259,25 +431,50 @@ class DecodeEngine:
         self.pos[slot] = len(toks)
         self.last_tok[slot] = tok
         self.remaining[slot] = req.max_new_tokens - len(req.output)
-        # the prefilled KV lines are residency the tenant pays for
-        self.admission.charge(req, kv_tokens=len(toks))
+        # the prefilled KV residency the tenant pays for: dense lines, or
+        # (paged) the pages actually pinned
+        if self.paging is not None:
+            self.admission.charge(req, kv_pages=len(pages))
+        else:
+            self.admission.charge(req, kv_tokens=len(toks))
         self.metrics.counter("serve_requests_admitted").inc()
         self.metrics.counter(
             METRIC_SERVE_TENANT_ADMITTED,
             "admissions per tenant").inc(tenant=req.tenant)
         self._maybe_finish(slot)
 
-    def _evict(self, victim: Request) -> int:
-        """Evict a running request from its slot; it requeues at the head
-        of its QOS class in its tenant queue with partial output retained.
-        Returns the freed slot index (O(1) via the request's slot tag)."""
+    def _release_pages(self, slot: int, req: Request):
+        """Paged mode: return a slot's pages to the pool (eviction-aware
+        reclaim — freed pages immediately back the next allocation) and
+        its worst-case GrpTRES hold to the tenant."""
+        if self.paging is None:
+            return
+        pages = self._slot_pages[slot]
+        if pages:
+            self.allocator.free(pages)
+        self.admission.adjust_pages(req, -req._est_pages)
+        self._slot_pages[slot] = []
+        self.page_tables[slot] = NULL_PAGE
+
+    def _vacate(self, victim: Request) -> int:
+        """Shared eviction bookkeeping: clear the slot, free its pages,
+        return the slot/page holds, and requeue the request with partial
+        output retained.  Returns the freed slot index (O(1) via the
+        request's slot tag)."""
         slot = victim._slot
         assert slot >= 0 and self.slots[slot] is victim, (slot, victim.rid)
         self.slots[slot] = None
         victim._slot = -1
-        victim.preemptions += 1
+        self._release_pages(slot, victim)
         self.admission.release(victim)
         self.admission.requeue(victim)
+        return slot
+
+    def _evict(self, victim: Request) -> int:
+        """Evict a running request from its slot; it requeues at the head
+        of its QOS class in its tenant queue with partial output retained."""
+        victim.preemptions += 1
+        slot = self._vacate(victim)
         self.metrics.counter(
             METRIC_SERVE_PREEMPTIONS, "evicted decode slots").inc()
         return slot
@@ -287,6 +484,7 @@ class DecodeEngine:
         req.done = True
         self.slots[slot] = None
         req._slot = -1
+        self._release_pages(slot, req)
         self.admission.release(req)
         self.metrics.counter("serve_requests_completed").inc()
 
@@ -318,12 +516,84 @@ class DecodeEngine:
                                    axis=-1))
         return np.where(temps > 0, sampled, greedy).astype(np.int32)
 
+    # ------------------------------------------------------- page growth ----
+    def _reclaim_one_victim(self, requester: Request) -> bool:
+        """Pool-exhaustion scavenger reclaim: evict ONE running request
+        the requester's QOS may preempt (lowest QOS first, worst
+        fair-share standing, most recent admission — the same victim rule
+        admission preemption uses), freeing its pages.  Returns whether a
+        victim was evicted."""
+        qos = self.admission.qos_table.get(requester.qos)
+        if qos is None:
+            return False
+        victims = [r for r in self.slots
+                   if r is not None and r is not requester
+                   and qos.can_preempt(r.qos)]
+        if not victims:
+            return False
+        self._evict(self.admission.pick_victim(victims))
+        return True
+
+    def _requeue_starved(self, slot: int):
+        """A slot the pool starved out goes back to its tenant queue with
+        partial output retained (resume-exact, like a preemption victim);
+        page-budget admission re-admits it once pages free up."""
+        self._vacate(self.slots[slot])
+        self.metrics.counter(
+            "serve_page_starvations",
+            "slots requeued on page-pool exhaustion").inc()
+
+    def _ensure_pages(self, active: list):
+        """Grow each live slot's allocation to cover the coming chunk
+        (on-demand growth at decode-time page boundaries).  The +2
+        headroom keeps the slot's freeze boundary strictly beyond the
+        chunk, so a fully-grown paged slot freezes exactly where the
+        dense cache would — bit-identical stopping.  On pool exhaustion,
+        reclaim via one-victim scavenger eviction; a slot that still
+        cannot cover even its current position requeues starved (its
+        ``limit`` would otherwise let it write the null page)."""
+        ps = self.paging.page_size
+        for i in list(active):
+            req = self.slots[i]
+            if req is None:                    # evicted by a reclaim below
+                active.remove(i)
+                continue
+            # a nearly-finished slot only needs pages for the tokens it
+            # may still generate — don't pin headroom it can never use
+            steps = min(self.decode_chunk, max(int(self.remaining[i]), 1))
+            target = min(int(self.pos[i]) + steps + 2, self.cache_len)
+            need = pages_for(target, ps) - len(self._slot_pages[i])
+            if need <= 0:
+                continue
+            got = self.allocator.alloc(need)
+            if got is None and self._reclaim_one_victim(req):
+                got = self.allocator.alloc(need)
+            if got is None:                    # partial growth: best effort
+                got = self.allocator.alloc(
+                    min(need, self.allocator.available()))
+            if got:
+                # no adjust_pages here: the tenant's GrpTRES hold already
+                # reserved the worst-case footprint at admission
+                n0 = len(self._slot_pages[i])
+                self._slot_pages[i].extend(got)
+                self.page_tables[i, n0:n0 + len(got)] = got
+            if self._capacity(i) <= int(self.pos[i]):
+                # starved: not even the current token's page
+                self._requeue_starved(i)
+                active.remove(i)
+
     # -------------------------------------------------------------- step ----
     def step(self) -> int:
         """Admit + one batched decode dispatch (``decode_chunk`` tokens on
         the fused path, one on the host path).  Returns #active + #queued."""
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
+        if self.paging is not None and active:
+            self._ensure_pages(active)
+            # growth may have evicted/requeued slots at ANY index (a
+            # reclaim victim can precede its requester) — rebuild rather
+            # than trust the in-place edits
+            active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return self.admission.pending()
         if self.fused:
@@ -345,13 +615,27 @@ class DecodeEngine:
             (self.slots[i].temperature if self.slots[i] else 0.0)
             for i in range(self.num_slots)], np.float32)
         t0 = time.perf_counter()
-        toks, self.cache, token, pos, remaining, done_d, self._key = \
-            self._decode_n(
-                self.params, self.cache, jnp.asarray(self.last_tok),
-                jnp.asarray(self.pos.astype(np.int32)),
-                jnp.asarray(self.remaining.astype(np.int32)),
-                jnp.asarray(done), jnp.asarray(eos), jnp.asarray(temps),
-                self._key)
+        if self.paging is not None:
+            limit = np.array([
+                self._capacity(i) if self.slots[i] is not None
+                else self.cache_len
+                for i in range(self.num_slots)], np.int32)
+            toks, self.cache, token, pos, remaining, done_d, self._key = \
+                self._decode_n(
+                    self.params, self.cache, jnp.asarray(self.last_tok),
+                    jnp.asarray(self.pos.astype(np.int32)),
+                    jnp.asarray(self.remaining.astype(np.int32)),
+                    jnp.asarray(done), jnp.asarray(eos), jnp.asarray(temps),
+                    self._key, jnp.asarray(self.page_tables),
+                    jnp.asarray(limit))
+        else:
+            toks, self.cache, token, pos, remaining, done_d, self._key = \
+                self._decode_n(
+                    self.params, self.cache, jnp.asarray(self.last_tok),
+                    jnp.asarray(self.pos.astype(np.int32)),
+                    jnp.asarray(self.remaining.astype(np.int32)),
+                    jnp.asarray(done), jnp.asarray(eos), jnp.asarray(temps),
+                    self._key)
         # ONE sync per chunk: everything below is host-side numpy
         toks = np.asarray(toks)
         pos = np.asarray(pos)
@@ -369,11 +653,19 @@ class DecodeEngine:
             n_gen = int(pos[i]) - int(self.pos[i])
             if n_gen:
                 req.output.extend(int(t) for t in toks[i, :n_gen])
-                # per-chunk charge: n tokens + KV-line rent summed over the
-                # chunk's steps (sum_{j=1..n} pos0+j), exactly the per-token
-                # path's total
-                kv = n_gen * int(self.pos[i]) + n_gen * (n_gen + 1) // 2
-                charges.append((req, n_gen, kv))
+                if self.paging is not None:
+                    # paged rent: pages actually pinned x steps — true HBM
+                    # residency, so a short request stops paying for cache
+                    # it never held
+                    charges.append(
+                        (req, n_gen, 0,
+                         len(self._slot_pages[i]) * n_gen))
+                else:
+                    # per-chunk charge: n tokens + KV-line rent summed over
+                    # the chunk's steps (sum_{j=1..n} pos0+j), exactly the
+                    # per-token path's total
+                    kv = n_gen * int(self.pos[i]) + n_gen * (n_gen + 1) // 2
+                    charges.append((req, n_gen, kv))
                 tenant_tokens[req.tenant] = \
                     tenant_tokens.get(req.tenant, 0) + n_gen
                 total += n_gen
@@ -381,7 +673,16 @@ class DecodeEngine:
             self.last_tok[i] = token[i]
             self.remaining[i] = remaining[i]
             if done_d[i]:
-                self._finish(i)
+                hit_eos = (req.eos_id is not None and req.output
+                           and req.output[-1] == req.eos_id)
+                if (self.paging is not None and not hit_eos
+                        and self.remaining[i] > 0
+                        and self._capacity(i) < self.cache_len):
+                    # froze at its allocation boundary, not a real stop:
+                    # partial growth ran out of pages mid-chunk
+                    self._requeue_starved(i)
+                else:
+                    self._finish(i)
         self.admission.charge_bulk(charges)
         self.metrics.counter("serve_tokens_generated").inc(total)
         tok_counter = self.metrics.counter(
@@ -394,7 +695,13 @@ class DecodeEngine:
         token = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos.astype(np.int32))
         t0 = time.perf_counter()
-        logits, self.cache = self._step(self.params, self.cache, token, pos)
+        if self.paging is not None:
+            logits, self.cache = self._step(
+                self.params, self.cache, token, pos,
+                jnp.asarray(self.page_tables))
+        else:
+            logits, self.cache = self._step(self.params, self.cache, token,
+                                            pos)
         self.metrics.histogram("serve_decode_seconds",
                                "batched decode-step latency").observe(
             time.perf_counter() - t0)
@@ -406,8 +713,14 @@ class DecodeEngine:
             self.pos[i] += 1
             self.last_tok[i] = nxt[i]
             self.remaining[i] -= 1
-            # one generated token + rent on the KV lines this slot holds
-            self.admission.charge(req, tokens=1, kv_tokens=int(self.pos[i]))
+            # one generated token + rent on the KV residency this slot
+            # holds (dense lines, or the pages actually pinned)
+            if self.paging is not None:
+                self.admission.charge(req, tokens=1,
+                                      kv_pages=len(self._slot_pages[i]))
+            else:
+                self.admission.charge(req, tokens=1,
+                                      kv_tokens=int(self.pos[i]))
             tenant_tokens[req.tenant] = tenant_tokens.get(req.tenant, 0) + 1
             self._maybe_finish(i)
         self.metrics.counter("serve_tokens_generated").inc(len(active))
