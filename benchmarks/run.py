@@ -29,6 +29,13 @@ def main(argv=None) -> int:
     ap.add_argument("--compare-threshold", type=float, default=0.20,
                     help="allowed fractional slowdown vs baseline "
                          "(default 0.20)")
+    ap.add_argument("--update-baseline", nargs="?", const=BASELINE_PATH,
+                    default=None, metavar="PATH",
+                    help="write this run's results as the JSON baseline "
+                         "--compare reads (default benchmarks/"
+                         "baseline.json) — replaces hand-editing the CI "
+                         "baseline; with --compare, the gate runs against "
+                         "the OLD baseline first")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -56,18 +63,33 @@ def main(argv=None) -> int:
     for name, us, derived in results:
         print(f"{name},{us:.1f},{derived}")
     if args.json:
-        import json
-        with open(args.json, "w") as f:
-            json.dump([{"name": name, "us_per_call": round(us, 1),
-                        "derived": derived}
-                       for name, us, derived in results], f, indent=2)
-        print(f"[wrote {args.json}]", file=sys.stderr)
+        write_results(results, args.json)
     print(f"\n{len(results)} benchmarks in "
           f"{time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    rc = 0
     if args.compare:
-        return compare_against(results, args.compare,
-                               args.compare_threshold)
-    return 0
+        rc = compare_against(results, args.compare, args.compare_threshold)
+    if args.update_baseline:
+        # update AFTER the gate so the comparison ran against the old
+        # baseline; the refresh happens even on a failed gate (the caller
+        # decided this run is the new reference by passing the flag)
+        write_results(results, args.update_baseline)
+    return rc
+
+
+#: where the CI regression gate looks for its committed baseline
+BASELINE_PATH = "benchmarks/baseline.json"
+
+
+def write_results(results, path: str):
+    """Serialize results in the artifact/baseline JSON schema (shared by
+    --json, --update-baseline, and the --compare reader)."""
+    import json
+    with open(path, "w") as f:
+        json.dump([{"name": name, "us_per_call": round(us, 1),
+                    "derived": derived}
+                   for name, us, derived in results], f, indent=2)
+    print(f"[wrote {path}]", file=sys.stderr)
 
 
 def compare_against(results, baseline_path: str,

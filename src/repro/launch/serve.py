@@ -13,8 +13,26 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_reduced_config
 from repro.models import init_params
 from repro.monitoring import MetricsRegistry
-from repro.monitoring.metrics import METRIC_SERVE_TENANT_TOKENS
+from repro.monitoring.metrics import (
+    METRIC_SERVE_PREFIX_EVICTIONS, METRIC_SERVE_PREFIX_HITS,
+    METRIC_SERVE_PREFIX_MISSES, METRIC_SERVE_PREFIX_REUSED_TOKENS,
+    METRIC_SERVE_TENANT_TOKENS,
+)
 from repro.serving import AdmissionController, DecodeEngine, Request
+
+#: page size --prefix-cache falls back to when --kv-paging is absent
+DEFAULT_PREFIX_PAGE_SIZE = 16
+
+
+def resolve_prefix_paging(prefix_cache: bool, kv_paging: int) -> int:
+    """--prefix-cache implies --kv-paging: with no explicit page size the
+    default kicks in (and says so), since the radix index shares physical
+    pages and cannot exist over the dense per-slot cache."""
+    if prefix_cache and not kv_paging:
+        print(f"[serve] --prefix-cache implies --kv-paging: using "
+              f"{DEFAULT_PREFIX_PAGE_SIZE}-line pages")
+        return DEFAULT_PREFIX_PAGE_SIZE
+    return kv_paging
 
 
 def parse_tenants(spec: str, shares: str = "") -> dict[str, int]:
@@ -92,6 +110,14 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="page-pool size override (default: dense-budget "
                          "equivalent, slots*cache_len/page_size + null)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache: requests sharing a prompt "
+                         "prefix map the same KV pages copy-on-write and "
+                         "prefill only their suffix (implies --kv-paging "
+                         f"{DEFAULT_PREFIX_PAGE_SIZE})")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend the same N-token system prompt to every "
+                         "synthetic request (exercises --prefix-cache)")
     ap.add_argument("--tenants", default="",
                     help="tenant:shares list, e.g. alice:8,bob:1 "
                          "(empty: single default tenant)")
@@ -114,6 +140,7 @@ def main(argv=None) -> int:
     for name, share in tenants.items():
         admission.add_tenant(name, shares=share)
     use_pallas = resolve_use_pallas(args.use_pallas, jax.default_backend())
+    kv_paging = resolve_prefix_paging(args.prefix_cache, args.kv_paging)
     engine = DecodeEngine(cfg, params, num_slots=args.slots,
                           cache_len=args.cache_len, metrics=metrics,
                           admission=admission,
@@ -121,15 +148,22 @@ def main(argv=None) -> int:
                           decode_chunk=args.decode_chunk,
                           fused=not args.no_fused,
                           prefill_buckets=parse_buckets(args.prefill_buckets),
-                          kv_page_size=args.kv_paging,
-                          kv_pages=args.kv_pages)
+                          kv_page_size=kv_paging,
+                          kv_pages=args.kv_pages,
+                          prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(args.seed)
     names = list(tenants)
+    assert args.shared_prefix < args.cache_len, "--shared-prefix too long"
+    system = rng.integers(2, cfg.vocab_size,
+                          args.shared_prefix).astype(np.int32)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.cache_len // 4))
+        prompt = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
+        if args.shared_prefix:
+            prompt = np.concatenate([system, prompt])[:args.cache_len - 1]
         engine.submit(Request(
             rid=rid,
-            prompt=rng.integers(2, cfg.vocab_size, plen).astype(np.int32),
+            prompt=prompt,
             max_new_tokens=args.max_new,
             temperature=float(rid % 2) * 0.8,
             tenant=names[rid % len(names)]))
@@ -150,6 +184,14 @@ def main(argv=None) -> int:
               f"(high-water {engine.allocator.high_water}, "
               f"{int(metrics.counter('serve_page_starvations').value())} "
               f"starvation requeues)")
+    if engine.prefix is not None:
+        hits = int(metrics.counter(METRIC_SERVE_PREFIX_HITS).value())
+        misses = int(metrics.counter(METRIC_SERVE_PREFIX_MISSES).value())
+        print(f"prefix cache: {hits} hits / {misses} misses, "
+              f"{int(metrics.counter(METRIC_SERVE_PREFIX_REUSED_TOKENS).value())} "
+              f"prompt tokens reused, "
+              f"{int(metrics.counter(METRIC_SERVE_PREFIX_EVICTIONS).value())} "
+              f"pages evicted, {engine.prefix.nodes} pages cached")
     if len(names) > 1 and total:
         tok = metrics.counter(METRIC_SERVE_TENANT_TOKENS)
         parts = []

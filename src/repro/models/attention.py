@@ -231,6 +231,70 @@ def attention_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
     return out_proj(p, o), {"k": ck, "v": cv}
 
 
+def attention_prefill_paged(p: dict, x: jax.Array, cache: dict,
+                            page_table: jax.Array, start: jax.Array,
+                            cfg: ModelConfig):
+    """Suffix prefill against a cached prefix in the paged KV pool
+    (prefix-cache reuse: only the un-cached tail of the prompt runs).
+
+    x: (B, S, d) hidden states of the *suffix* tokens, at absolute
+    positions ``start + [0, S)``; cache k/v: (num_pages, page_size, K,
+    Dh) — the shared pool; page_table: (B, n_prefix_pages) int32 rows
+    whose first ``start // page_size`` entries are the request's
+    READ-ONLY shared prefix pages (any remaining entries null — callers
+    may bucket the row width to the match depth so cost scales with the
+    actual prefix); start: scalar int32 prefix length, page-aligned.
+
+    Suffix queries attend causally over [the prefix gathered through the
+    page table (positions < start), the suffix itself].  The masking and
+    einsum strings are exactly the dense prefill's, so with compute
+    dtype == pool dtype the logits match a full-prompt prefill bit for
+    bit.  The pool is **never written** — shared pages are read-only by
+    construction; the suffix K/V slice is returned for the caller to
+    scatter into privately-owned pages (the copy-on-write fork: writes
+    only ever land past the shared region).
+
+    Returns (out (B,S,d), {"k","v"} suffix slice (B, S, K, Dh)).
+    """
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(p, x, cfg)
+    pos = start + jnp.arange(S)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    H, Dh = q.shape[2], q.shape[3]
+    K = k.shape[2]
+    G = H // K
+    ps = cache["k"].shape[1]
+    L = page_table.shape[1] * ps                     # logical prefix width
+    scale = Dh ** -0.5
+    kd = cache["k"][page_table].reshape(B, L, K, Dh).astype(q.dtype)
+    vd = cache["v"][page_table].reshape(B, L, K, Dh).astype(q.dtype)
+    qg = q.reshape(B, S, K, G, Dh)
+    # prefix part: every suffix query sees every position < start (all
+    # causal by construction); pool garbage past start is masked out
+    lp = jnp.einsum("bqkgd,bskd->bkgqs", qg, kd).astype(jnp.float32) * scale
+    pre_valid = jnp.arange(L) < start                # (L,)
+    lp = jnp.where(pre_valid[None, None, None, None, :], lp, _NEG_INF)
+    # suffix part: causal within the suffix (pad tails in a bucketed
+    # suffix sit at higher positions, so real queries never see them)
+    ls = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    causal = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]
+    ls = jnp.where(causal[None, None, None], ls, _NEG_INF)
+    probs = jax.nn.softmax(jnp.concatenate([lp, ls], axis=-1),
+                           axis=-1).astype(x.dtype)
+    # combine the two regions with f32 partial sums and ONE final cast:
+    # a bf16 round between the partials would double-round vs the dense
+    # path's single accumulation and drift the suffix hidden states
+    f32 = jnp.float32
+    o = (jnp.einsum("bkgqs,bskd->bqkgd", probs[..., :L].astype(f32),
+                    vd.astype(f32))
+         + jnp.einsum("bkgqs,bskd->bqkgd", probs[..., L:].astype(f32),
+                      v.astype(f32)))
+    o = o.astype(x.dtype).reshape(B, S, H, Dh)
+    return out_proj(p, constrain(o, "heads")), {"k": k, "v": v}
+
+
 def attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
                      cfg: ModelConfig, use_pallas: bool = False):
     """One-token decode.  x: (B,1,d); cache k/v: (B, slots, K, Dh);

@@ -278,6 +278,77 @@ def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,
     return logits, {"layers": list(caches)}
 
 
+def prefill_suffix(params, batch: dict, cache, page_table, start,
+                   cfg: ModelConfig, run: RunConfig,
+                   last_pos: Optional[jax.Array] = None):
+    """Prefill from a page-aligned offset against cached prefix pages
+    (the prefix-cache reuse path: only the prompt's un-cached tail runs).
+
+    ``batch["tokens"]``: (B, S) the *suffix* tokens, at absolute
+    positions ``start + [0, S)``; ``cache``: the paged pool pytree
+    (read-only here); ``page_table``: (B, n_prefix_pages) rows whose
+    first ``start // page_size`` entries are the request's shared prefix
+    pages; ``start``: scalar int32 prefix length (page-aligned);
+    ``last_pos``: like :func:`prefill` — bucketed suffixes pass the true
+    last *local* index.
+
+    Returns (logits (B,1,V), {"layers": [...]} suffix cache slices, each
+    (G, B, S, K, Dh)) — the caller scatters the slices into its
+    privately-owned pages; the shared pages are never written.
+    Full-attention configs only (paging already gates SSM/ring out).
+    """
+    P = group_period(cfg)
+    sched = layer_schedule(cfg)[:P]
+    assert all(mixer == "attn" for mixer, _ in sched), \
+        "prefix reuse is full-attention only"
+    h = embed_tokens(params, batch["tokens"], cfg)
+    S = h.shape[1]
+    if cfg.pos_embedding == "sinusoidal":
+        pe = A.sinusoidal_pe(start + jnp.arange(S), cfg.d_model)
+        h = h + pe[None].astype(h.dtype)
+    h = constrain(h, "hidden")
+
+    def group_body(x, inp):
+        group_params, group_cache = inp
+        new_caches = []
+        for i, (_mixer, ffn) in enumerate(sched):
+            p = group_params[i]
+            hh = rmsnorm(x, p["norm1"]["scale"], cfg.norm_eps)
+            hh, c = A.attention_prefill_paged(p["attn"], hh, group_cache[i],
+                                              page_table, start, cfg)
+            x = constrain(x + hh, "hidden")
+            if ffn != "none":
+                hh = rmsnorm(x, p["norm2"]["scale"], cfg.norm_eps)
+                if ffn == "moe":
+                    hh, _ = MOE.moe_apply(p["moe"], hh, cfg)
+                else:
+                    hh = mlp_apply(p["mlp"], hh, cfg.mlp_type)
+                x = constrain(x + hh, "hidden")
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if run.remat in ("layer", "full"):
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    if run.unroll:
+        n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+        per_group = []
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda l: l[g], tuple(params["layers"]))
+            gc = jax.tree.map(lambda l: l[g], tuple(cache["layers"]))
+            h, c = group_body(h, (gp, gc))
+            per_group.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    else:
+        h, caches = jax.lax.scan(
+            group_body, h, (tuple(params["layers"]), tuple(cache["layers"])))
+    h = rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    if last_pos is None:
+        h_last = h[:, -1:]
+    else:
+        h_last = jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
+    return unembed(params, h_last, cfg), {"layers": list(caches)}
+
+
 # ----------------------------------------------------------------- decode ----
 
 def decode_step(params, cache, token, pos, cfg: ModelConfig, run: RunConfig,

@@ -70,11 +70,21 @@ class PagedKVConfig:
 
 
 class PageAllocator:
-    """Host-side free-list over the physical pages of one pool.
+    """Host-side free-list over the physical pages of one pool, with
+    per-page reference counts.
 
     Grants are **all-or-nothing**: a request that needs ``n`` pages either
     gets ``n`` or ``None``, so a half-grown request never wedges the pool.
     Page 0 (the null page) is reserved and never granted.
+
+    Reference counts back prefix sharing (``serving.prefix``): a page
+    mapped read-only into several page tables — or pinned by the radix
+    index itself — carries one reference per holder.  :meth:`alloc`
+    grants pages at refcount 1, :meth:`ref` adds holders, and
+    :meth:`free` *decrements*: the page returns to the free list only
+    when its last holder lets go, so a shared prefix page outlives any
+    single request.  A page is never simultaneously free and referenced
+    (asserted; property-tested in ``tests/test_prefix.py``).
     """
 
     def __init__(self, num_pages: int):
@@ -83,6 +93,7 @@ class PageAllocator:
         # LIFO free list: recently-freed pages are re-granted first, which
         # keeps the hot working set of physical pages small
         self._free = list(range(num_pages - 1, NULL_PAGE, -1))
+        self._refs = [0] * num_pages
         self._in_use = 0
         self.high_water = 0
 
@@ -91,23 +102,47 @@ class PageAllocator:
 
     @property
     def in_use(self) -> int:
+        """Pages with at least one holder."""
         return self._in_use
 
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
+    @property
+    def total_refs(self) -> int:
+        """Sum of refcounts over all pages (= page-table occupancy plus
+        index pins; the property tests' conservation quantity)."""
+        return sum(self._refs)
+
     def alloc(self, n: int):
-        """Grant ``n`` pages or None (all-or-nothing)."""
+        """Grant ``n`` pages (refcount 1 each) or None (all-or-nothing)."""
         if n <= 0:
             return []
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self._refs[p] == 0, (p, self._refs[p])
+            self._refs[p] = 1
         self._in_use += n
         self.high_water = max(self.high_water, self._in_use)
         return pages
 
-    def free(self, pages):
-        """Return pages to the pool (idempotence is the caller's job)."""
+    def ref(self, pages):
+        """Add one holder to each page (must already be allocated)."""
         for p in pages:
             assert NULL_PAGE < p < self.num_pages, p
-            self._free.append(p)
-        self._in_use -= len(pages)
+            assert self._refs[p] > 0, f"ref on free page {p}"
+            self._refs[p] += 1
+
+    def free(self, pages):
+        """Drop one holder per page; a page whose last holder leaves
+        returns to the pool (idempotence is the caller's job)."""
+        for p in pages:
+            assert NULL_PAGE < p < self.num_pages, p
+            assert self._refs[p] > 0, f"double free of page {p}"
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+                self._in_use -= 1
         assert self._in_use >= 0, self._in_use

@@ -43,6 +43,16 @@ METRIC_SERVE_TENANT_ADMITTED = "serve_tenant_requests_admitted"
 #: decode slots evicted for a higher-QOS request
 METRIC_SERVE_PREEMPTIONS = "serve_preemptions_total"
 
+# Prefix cache (radix-style shared-prefix reuse over the paged KV pool).
+#: admissions that mapped >= 1 cached prefix page read-only
+METRIC_SERVE_PREFIX_HITS = "serve_prefix_hits"
+#: admissions that found no cached prefix
+METRIC_SERVE_PREFIX_MISSES = "serve_prefix_misses"
+#: prompt tokens whose prefill was skipped via shared pages
+METRIC_SERVE_PREFIX_REUSED_TOKENS = "serve_prefix_reused_tokens"
+#: cached prefix pages LRU-evicted back to the free pool under pressure
+METRIC_SERVE_PREFIX_EVICTIONS = "serve_prefix_evicted_pages"
+
 
 def _labels_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))
@@ -122,6 +132,11 @@ class Histogram:
 
     def count(self, **labels) -> int:
         return sum(self._counts.get(_labels_key(labels), []))
+
+    def sum(self, **labels) -> float:
+        """Total of all observed values (the Prometheus ``_sum`` series)
+        — e.g. cumulative prefill seconds across admissions."""
+        return self._sum.get(_labels_key(labels), 0.0)
 
     def quantile(self, q: float, **labels) -> float:
         """Approximate quantile from bucket boundaries."""

@@ -2,12 +2,13 @@ from repro.serving.admission import (
     AdmissionController, SERVING_TRES_WEIGHTS, Tenant,
 )
 from repro.serving.engine import DecodeEngine, Request
+from repro.serving.prefix import PrefixCache, RadixNode
 from repro.serving.serve_step import (
     fused_serve_step_lowering_args, make_fused_serve_step, make_serve_step,
     serve_step_lowering_args,
 )
 
-__all__ = ["AdmissionController", "DecodeEngine", "Request",
-           "SERVING_TRES_WEIGHTS", "Tenant", "fused_serve_step_lowering_args",
-           "make_fused_serve_step", "make_serve_step",
-           "serve_step_lowering_args"]
+__all__ = ["AdmissionController", "DecodeEngine", "PrefixCache",
+           "RadixNode", "Request", "SERVING_TRES_WEIGHTS", "Tenant",
+           "fused_serve_step_lowering_args", "make_fused_serve_step",
+           "make_serve_step", "serve_step_lowering_args"]

@@ -288,13 +288,16 @@ class AdmissionController:
 
     # ---------------------------------------------------------- charging ----
     def charge(self, req, tokens: int = 0, kv_tokens: int = 0,
-               kv_pages: int = 0) -> float:
+               kv_pages: float = 0) -> float:
         """Charge generated tokens and/or KV-cache residency to the
         request's tenant in the shared ledger (QOS usage_factor applied,
         so scavenger tokens are discounted like scavenger job-seconds).
         Dense engines bill residency in ``kv_tokens`` (lines x steps);
         the paged engine bills ``kv_pages`` (pages x steps) — actual HBM
         held, so a short request stops paying for cache it never pinned.
+        ``kv_pages`` may be fractional: a prefix-cache page shared by N
+        live requests bills ``1/N`` to each holder, so the pool's true
+        residency is charged exactly once per step across all sharers.
 
         No decay advance unless ``wall_clock_decay`` was enabled: the
         ledger's clock is driven by whoever owns it (the cluster's event

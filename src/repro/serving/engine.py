@@ -46,6 +46,20 @@ preemption uses; if nothing is evictable the starved slot truncates at
 its allocation boundary instead of corrupting neighbours.  Greedy fused
 decode is bit-identical to the dense cache (the gathered logical view
 feeds the exact same masked attention math).
+
+**Prefix cache** (``prefix_cache=True``, needs paging): a radix index
+(``serving.prefix``) maps complete prompt-token pages to physical pages.
+On admission the engine looks up the longest cached prefix, maps those
+pages READ-ONLY into the new request's page table (copy-on-write: refs,
+not copies — decode writes only ever land past the shared region on
+privately-owned pages) and prefills **only the suffix**
+(``models.model.prefill_suffix``, riding the same buckets).  Finished
+requests donate their complete prompt pages to the index; under
+capacity pressure the index LRU-evicts unpinned prefixes back to the
+free pool *before* the scavenger victim path fires.  Shared pages bill
+``gres/kv_page`` residency once, amortized across current holders, so
+``sshare --tres`` keeps reporting true HBM use, and greedy decode stays
+bit-identical to the no-reuse path.
 """
 from __future__ import annotations
 
@@ -60,18 +74,21 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import init_cache, prefill
-from repro.models.model import decode_n, decode_step
+from repro.models.model import decode_n, decode_step, prefill_suffix
 from repro.models.paging import (
     NULL_PAGE, PageAllocator, PagedKVConfig, pages_for,
 )
 from repro.monitoring import MetricsRegistry
 from repro.monitoring.metrics import (
-    METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_TENANT_ADMITTED,
+    METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_PREFIX_EVICTIONS,
+    METRIC_SERVE_PREFIX_HITS, METRIC_SERVE_PREFIX_MISSES,
+    METRIC_SERVE_PREFIX_REUSED_TOKENS, METRIC_SERVE_TENANT_ADMITTED,
     METRIC_SERVE_TENANT_TOKENS,
 )
 from repro.serving.admission import (
     SERVING_TRES_WEIGHTS, AdmissionController,
 )
+from repro.serving.prefix import PrefixCache
 
 
 @dataclass
@@ -100,7 +117,8 @@ class DecodeEngine:
                  decode_chunk: int = 1, fused: bool = True,
                  prefill_buckets: Union[None, str, Sequence[int]] = None,
                  kv_page_size: int = 0,
-                 kv_pages: Optional[int] = None):
+                 kv_pages: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.run = run or RunConfig(remat="none")
@@ -125,6 +143,18 @@ class DecodeEngine:
                 (num_slots, self.paging.pages_per_seq), NULL_PAGE, np.int32)
             self._slot_pages: list[list[int]] = [[] for _ in
                                                  range(num_slots)]
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            if self.paging is None:
+                raise ValueError(
+                    "prefix_cache=True needs the paged KV cache: pass "
+                    "kv_page_size > 0 (CLI: --prefix-cache implies "
+                    "--kv-paging)")
+            self.prefix = PrefixCache(self.allocator, self.paging.page_size)
+            # active-request holders per physical page, for amortized
+            # residency billing (a page shared by h requests bills 1/h
+            # to each, so the ledger charges true HBM once)
+            self._page_holders: dict[int, int] = {}
         self.cache = init_cache(cfg, num_slots, cache_len,
                                 paging=self.paging)
         self.slots: list[Optional[Request]] = [None] * num_slots
@@ -137,6 +167,8 @@ class DecodeEngine:
         self._decode_n = self._build_decode_n()
         self._insert = self._build_insert()
         self._prefill_fn = self._build_prefill()
+        self._suffix_prefill_fn = (self._build_suffix_prefill()
+                                   if self.prefix is not None else None)
 
     def _resolve_paging(self, kv_page_size: int,
                         kv_pages: Optional[int]) -> Optional[PagedKVConfig]:
@@ -148,11 +180,25 @@ class DecodeEngine:
         dense and paged engines are HBM-comparable out of the box."""
         if not kv_page_size:
             return None
-        attn_only = self.cfg.attn_every == 1 and self.cfg.ssm is None
-        if not attn_only or self.cfg.sliding_window is not None:
+        # name the offending config field: "full-attention only" alone
+        # sends operators hunting through the whole ModelConfig
+        if self.cfg.ssm is not None:
             raise ValueError(
-                "kv_page_size: paged KV cache supports full-attention, "
-                "non-sliding-window configs only")
+                "kv_page_size: paged KV cache needs a full-attention "
+                f"config, but cfg.ssm={self.cfg.ssm!r} — SSM recurrent "
+                "state is not line-addressable, so it cannot be paged")
+        if self.cfg.attn_every != 1:
+            raise ValueError(
+                "kv_page_size: paged KV cache needs a full-attention "
+                f"config, but cfg.attn_every={self.cfg.attn_every} "
+                "interleaves non-attention sublayers whose state has no "
+                "page layout")
+        if self.cfg.sliding_window is not None:
+            raise ValueError(
+                "kv_page_size: paged KV cache does not support "
+                f"cfg.sliding_window={self.cfg.sliding_window} — the "
+                "windowed ring cache's wrapped slot layout has no "
+                "page-table equivalent yet")
         assert self.cache_len % kv_page_size == 0, \
             (self.cache_len, kv_page_size)
         if kv_pages is not None:
@@ -253,6 +299,20 @@ class DecodeEngine:
 
         return prefill_fn
 
+    def _build_suffix_prefill(self):
+        """Jitted suffix prefill for prefix-cache hits: compiles once per
+        (bucketed) suffix length; ``start`` and the page table are traced
+        so any prefix depth reuses the same program."""
+        cfg, run = self.cfg, self.run
+
+        @jax.jit
+        def suffix_fn(params, cache, tokens, page_table, start, last_pos):
+            return prefill_suffix(params, {"tokens": tokens}, cache,
+                                  page_table, start, cfg, run,
+                                  last_pos=last_pos)
+
+        return suffix_fn
+
     def _resolve_buckets(self, spec):
         """Power-of-two prompt-length buckets, or None (exact-length
         prefill).  Bucketing pads the prompt tail, which is only sound
@@ -317,12 +377,34 @@ class DecodeEngine:
             return self.cache_len
         return len(self._slot_pages[slot]) * self.paging.page_size
 
+    def _resume_tokens(self, req) -> np.ndarray:
+        """The token sequence a (possibly resumed) request prefills:
+        prompt plus retained partial output, minus the last token (which
+        re-decodes)."""
+        if req.output:
+            return np.concatenate(
+                [req.prompt, np.asarray(req.output[:-1], np.int32)])
+        return np.asarray(req.prompt, np.int32)
+
     def _fits_pages(self, req) -> bool:
         """Page-budget admission predicate: the resume/prefill pages must
-        fit the free pool right now (decode growth is handled later)."""
-        toks = len(req.prompt) + max(len(req.output) - 1, 0)
-        return pages_for(toks, self.paging.page_size) \
-            <= self.allocator.available()
+        fit the free pool right now (decode growth is handled later).
+        With the prefix cache, cached prefix pages cost nothing and
+        LRU-evictable cached pages count as free — so a request whose
+        prompt is mostly cached admits into a pool that looks full."""
+        toks = self._resume_tokens(req)
+        need = pages_for(len(toks), self.paging.page_size)
+        budget = self.allocator.available()
+        if self.prefix is not None and need > budget:
+            # matched pages cost nothing, and evictable cached pages
+            # count as free — EXCLUDING the match itself: placement pins
+            # it before evicting, so a page cannot serve as both shared
+            # mapping and eviction fodder (counting it twice would admit
+            # requests that then bounce off allocation forever)
+            matched = len(self.prefix.match(toks))
+            need -= matched
+            budget += max(self.prefix.evictable_pages() - matched, 0)
+        return need <= budget
 
     def pending(self) -> int:
         return self.admission.pending()
@@ -357,6 +439,20 @@ class DecodeEngine:
             slot = self._evict(victim)
             self._prefill_into(slot, req)
 
+    def _alloc_or_evict(self, need: int):
+        """Allocate ``need`` pages, LRU-evicting unpinned cached prefixes
+        to make room when the free pool is short (the capacity-pressure
+        valve that fires BEFORE scavenger preemption)."""
+        got = self.allocator.alloc(need)
+        if got is None and self.prefix is not None:
+            freed = self.prefix.evict(need - self.allocator.available())
+            if freed:
+                self.metrics.counter(
+                    METRIC_SERVE_PREFIX_EVICTIONS,
+                    "cached prefix pages LRU-evicted").inc(freed)
+                got = self.allocator.alloc(need)
+        return got
+
     def _prefill_into(self, slot: int, req: Request):
         """Prefill a request into a free slot.  A preempted request
         resumes: its prompt *and* retained partial output are prefilled,
@@ -365,27 +461,82 @@ class DecodeEngine:
         Paged mode allocates exactly ``ceil(len(toks)/page_size)`` pages
         first (the bucketed pad tail allocates and charges NOTHING — it
         scatters onto the null page) and bails back to the queue if the
-        pool cannot hold the prefill."""
-        if req.output:
-            toks = np.concatenate(
-                [req.prompt, np.asarray(req.output[:-1], np.int32)])
-        else:
-            toks = np.asarray(req.prompt, np.int32)
-        pages = None
+        pool cannot hold the prefill.  With the prefix cache, the longest
+        cached prefix maps read-only (one allocator ref per page), only
+        the suffix allocates/prefills, and the request's complete prompt
+        pages join the radix index afterwards."""
+        toks = self._resume_tokens(req)
+        pages = shared = None
         if self.paging is not None:
-            pages = self.allocator.alloc(
-                pages_for(len(toks), self.paging.page_size))
-            if pages is None:
+            ps = self.paging.page_size
+            if self.prefix is not None:
+                # acquire BEFORE the private alloc: matched pages are
+                # unpinned until then, and the eviction below must not
+                # free what we are about to map
+                shared = self.prefix.acquire(self.prefix.match(toks))
+            n_shared = len(shared) if shared else 0
+            priv = self._alloc_or_evict(
+                pages_for(len(toks), ps) - n_shared)
+            if priv is None and shared:
+                # the shortfall may only be coverable by the matched
+                # pages themselves: abandon the reuse (unpin, making the
+                # match eviction fodder) and retry as a plain prefill —
+                # correctness beats sharing
+                self.allocator.free(shared)
+                shared, n_shared = [], 0
+                priv = self._alloc_or_evict(pages_for(len(toks), ps))
+            if priv is None:
                 # preemption admitted past the page gate but the pool
                 # still can't hold the prefill: back to the queue
+                if shared:
+                    self.allocator.free(shared)      # unpin the match
                 self.admission.release(req)
                 self.admission.requeue(req)
                 return
+            pages = (shared or []) + priv
+            if self.prefix is not None:
+                # count hits/misses only for PLACED admissions, so a
+                # requeue bounce cannot inflate the reuse figures
+                if shared:
+                    self.metrics.counter(
+                        METRIC_SERVE_PREFIX_HITS,
+                        "admissions reusing cached prefix pages").inc()
+                    self.metrics.counter(
+                        METRIC_SERVE_PREFIX_REUSED_TOKENS,
+                        "prompt tokens served from cached pages").inc(
+                        n_shared * ps)
+                else:
+                    self.metrics.counter(
+                        METRIC_SERVE_PREFIX_MISSES,
+                        "admissions with no cached prefix").inc()
         with_timer = self.metrics.histogram(
             "serve_prefill_seconds", "prefill latency")
         t0 = time.perf_counter()
         try:
-            if self._buckets is not None:
+            if shared:
+                # prefix hit: prefill ONLY the suffix, attending to the
+                # shared pages through a prefix-only page-table row.  The
+                # row width buckets to the next power of two >= the match
+                # depth, so the gather/attention cost scales with the
+                # ACTUAL prefix, not cache_len (compiles once per
+                # (suffix bucket, prefix bucket) pair)
+                start = n_shared * self.paging.page_size
+                suffix = toks[start:]
+                P = len(suffix)
+                L = P if self._buckets is None else next(
+                    b for b in self._buckets if b >= P)
+                padded = np.zeros(L, np.int32)
+                padded[:P] = suffix
+                pb = 1
+                while pb < n_shared:
+                    pb *= 2
+                row = np.full(pb, NULL_PAGE, np.int32)
+                row[:n_shared] = shared
+                logits, cache1 = self._suffix_prefill_fn(
+                    self.params, self.cache, jnp.asarray(padded)[None],
+                    jnp.asarray(row)[None], jnp.asarray(start, jnp.int32),
+                    jnp.asarray(P - 1, jnp.int32))
+            elif self._buckets is not None:
                 P = len(toks)
                 L = next(b for b in self._buckets if b >= P)
                 padded = np.zeros(L, np.int32)
@@ -400,19 +551,33 @@ class DecodeEngine:
                     self.params, {"tokens": prompt}, self.cfg, self.run,
                     cache_len=None if self.paging is not None
                     else self.cache_len)
+            # sync inside the timed region: dispatch is async, and the
+            # very next consumer (argmax below) would absorb the device
+            # wait — serve_prefill_seconds must report real latency
+            jax.block_until_ready(logits)
         finally:
             with_timer.observe(time.perf_counter() - t0)
         if self.paging is not None:
-            # scatter the prefilled lines into the allocated pages; the
-            # bucketed pad tail's pages are the null page
+            # scatter the prefilled lines into the privately-owned pages
+            # (suffix-only on a prefix hit — shared pages are READ-ONLY
+            # and never written); the bucketed pad tail's pages are the
+            # null page
             ps = self.paging.page_size
             page_ids = np.full(pages_for(L, ps), NULL_PAGE, np.int32)
-            page_ids[:len(pages)] = pages
+            page_ids[:len(priv)] = priv
             self.cache = self._insert(self.cache, cache1,
                                       jnp.asarray(page_ids))
             self.page_tables[slot] = NULL_PAGE
             self.page_tables[slot, :len(pages)] = pages
             self._slot_pages[slot] = pages
+            if self.prefix is not None:
+                # donate the complete prompt pages to the radix index
+                # (the index takes its own refs) and register this
+                # request as a holder of everything it maps
+                self.prefix.insert(toks, pages)
+                for p in pages:
+                    self._page_holders[p] = \
+                        self._page_holders.get(p, 0) + 1
             # GrpTRES holds the request's WORST-CASE footprint for its
             # whole residency (SLURM-style reservation): decode growth
             # then cannot push a tenant past its kv_pages cap
@@ -432,9 +597,10 @@ class DecodeEngine:
         self.last_tok[slot] = tok
         self.remaining[slot] = req.max_new_tokens - len(req.output)
         # the prefilled KV residency the tenant pays for: dense lines, or
-        # (paged) the pages actually pinned
+        # (paged) the pages actually pinned — amortized across holders
+        # when the prefix cache shares them
         if self.paging is not None:
-            self.admission.charge(req, kv_pages=len(pages))
+            self.admission.charge(req, kv_pages=self._billed_pages(slot))
         else:
             self.admission.charge(req, kv_tokens=len(toks))
         self.metrics.counter("serve_requests_admitted").inc()
@@ -443,15 +609,33 @@ class DecodeEngine:
             "admissions per tenant").inc(tenant=req.tenant)
         self._maybe_finish(slot)
 
+    def _billed_pages(self, slot: int) -> float:
+        """KV-page residency this slot bills per step: each page costs
+        ``1 / holders``, so a prefix page shared by N live requests bills
+        once across all of them (plain paged mode: every page has one
+        holder and this is exactly the page count)."""
+        if self.prefix is None:
+            return len(self._slot_pages[slot])
+        return sum(1.0 / self._page_holders[p]
+                   for p in self._slot_pages[slot])
+
     def _release_pages(self, slot: int, req: Request):
-        """Paged mode: return a slot's pages to the pool (eviction-aware
-        reclaim — freed pages immediately back the next allocation) and
-        its worst-case GrpTRES hold to the tenant."""
+        """Paged mode: drop the slot's page references (private pages
+        return to the pool; shared prefix pages survive in the radix
+        index — eviction-aware reclaim still sees freed pages
+        immediately) and return the worst-case GrpTRES hold."""
         if self.paging is None:
             return
         pages = self._slot_pages[slot]
         if pages:
             self.allocator.free(pages)
+            if self.prefix is not None:
+                for p in pages:
+                    h = self._page_holders.get(p, 0) - 1
+                    if h > 0:
+                        self._page_holders[p] = h
+                    else:
+                        self._page_holders.pop(p, None)
         self.admission.adjust_pages(req, -req._est_pages)
         self._slot_pages[slot] = []
         self.page_tables[slot] = NULL_PAGE
@@ -565,13 +749,20 @@ class DecodeEngine:
             need = pages_for(target, ps) - len(self._slot_pages[i])
             if need <= 0:
                 continue
-            got = self.allocator.alloc(need)
+            # growth pressure relief, in escalation order: LRU-evict
+            # unpinned cached prefixes first, scavenger preemption only
+            # after the index has nothing left to give
+            got = self._alloc_or_evict(need)
             if got is None and self._reclaim_one_victim(req):
-                got = self.allocator.alloc(need)
+                got = self._alloc_or_evict(need)
             if got is None:                    # partial growth: best effort
                 got = self.allocator.alloc(
                     min(need, self.allocator.available()))
             if got:
+                if self.prefix is not None:
+                    for p in got:
+                        self._page_holders[p] = \
+                            self._page_holders.get(p, 0) + 1
                 # no adjust_pages here: the tenant's GrpTRES hold already
                 # reserved the worst-case footprint at admission
                 n0 = len(self._slot_pages[i])
@@ -655,11 +846,12 @@ class DecodeEngine:
                 req.output.extend(int(t) for t in toks[i, :n_gen])
                 if self.paging is not None:
                     # paged rent: pages actually pinned x steps — true HBM
-                    # residency, so a short request stops paying for cache
+                    # residency (shared prefix pages amortized across
+                    # holders), so a short request stops paying for cache
                     # it never held
                     charges.append(
                         (req, n_gen, 0,
-                         len(self._slot_pages[i]) * n_gen))
+                         self._billed_pages(i) * n_gen))
                 else:
                     # per-chunk charge: n tokens + KV-line rent summed over
                     # the chunk's steps (sum_{j=1..n} pos0+j), exactly the
@@ -717,7 +909,7 @@ class DecodeEngine:
             # holds (dense lines, or the pages actually pinned)
             if self.paging is not None:
                 self.admission.charge(req, tokens=1,
-                                      kv_pages=len(self._slot_pages[i]))
+                                      kv_pages=self._billed_pages(i))
             else:
                 self.admission.charge(req, tokens=1,
                                       kv_tokens=int(self.pos[i]))

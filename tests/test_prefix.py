@@ -1,0 +1,429 @@
+"""Prefix cache: allocator refcount semantics (incl. the property-test
+satellite), radix match/insert/evict unit behavior, engine-level shared
+prefix reuse (bit-identical greedy outputs, copy-on-write safety, LRU
+eviction under pressure, amortized residency billing), the improved
+paged-mode config errors, the --prefix-cache CLI implication, and the
+benchmarks --update-baseline satellite."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:             # container has no hypothesis wheel
+    from _mini_hypothesis import given, settings, strategies as st
+
+from repro.models.paging import NULL_PAGE, PageAllocator, pages_for
+from repro.monitoring.metrics import (
+    METRIC_SERVE_PREFIX_EVICTIONS, METRIC_SERVE_PREFIX_HITS,
+    METRIC_SERVE_PREFIX_MISSES, METRIC_SERVE_PREFIX_REUSED_TOKENS,
+)
+from repro.serving import (
+    AdmissionController, DecodeEngine, PrefixCache, Request,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+    cfg = get_reduced_config("stablelm-3b")
+    return cfg, init_params(cfg, 0)
+
+
+# ----------------------------------------------------------- allocator ----
+
+def test_allocator_refcounts_share_and_release():
+    a = PageAllocator(6)
+    got = a.alloc(2)
+    assert all(a.refcount(p) == 1 for p in got)
+    a.ref(got)                             # second holder
+    assert all(a.refcount(p) == 2 for p in got)
+    a.free(got)                            # first holder leaves
+    assert a.available() == 3 and a.in_use == 2
+    a.free(got)                            # last holder: back to the pool
+    assert a.available() == 5 and a.in_use == 0
+    assert all(a.refcount(p) == 0 for p in got)
+
+
+def test_allocator_refuses_ref_on_free_and_double_free():
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    a.free([p])
+    with pytest.raises(AssertionError):
+        a.ref([p])                         # ref on a free page
+    with pytest.raises(AssertionError):
+        a.free([p])                        # double free
+
+
+# --------------------------------------------------------- radix index ----
+
+def _toks(*blocks, ps=4):
+    """Build a token array from per-page block ids: block b yields
+    ``ps`` tokens [b*10, b*10+1, ...] so distinct ids never collide."""
+    out = []
+    for b in blocks:
+        out.extend(b * 10 + i for i in range(ps))
+    return np.asarray(out, np.int32)
+
+
+def test_radix_match_insert_and_fork():
+    a = PageAllocator(16)
+    pc = PrefixCache(a, page_size=4)
+    toks = _toks(1, 2, 3)                  # 12 tokens, 3 complete pages
+    pages = a.alloc(3)
+    assert pc.match(toks) == []
+    assert pc.insert(toks, pages) == 3
+    assert [n.page for n in pc.match(toks)] == pages[:2]  # strict prefix
+    longer = np.concatenate([toks, _toks(4)])
+    assert [n.page for n in pc.match(longer)] == pages    # all 3 now
+    # divergence in block 2 forks: only block 1 matches
+    fork = _toks(1, 7, 3)
+    assert [n.page for n in pc.match(fork)] == pages[:1]
+    # a second insert of the same blocks adds nothing (first wins)
+    other = a.alloc(3)
+    assert pc.insert(toks, other) == 0
+    assert pc.nodes == 3
+
+
+def test_radix_match_caps_below_last_token():
+    a = PageAllocator(16)
+    pc = PrefixCache(a, page_size=4)
+    toks = _toks(1, 2)                     # exactly 2 pages
+    pc.insert(toks, a.alloc(2))
+    # a prompt that IS the cached blocks must still prefill its last
+    # token: only (len-1)//ps = 1 page may match
+    assert len(pc.match(toks)) == 1
+    assert len(pc.match(np.asarray(toks[:4], np.int32))) == 0
+
+
+def test_radix_evict_lru_leaf_first_and_pin():
+    a = PageAllocator(16)
+    pc = PrefixCache(a, page_size=4)
+    p1 = a.alloc(2)
+    pc.insert(_toks(1, 2), p1)          # chain 1 -> 2
+    p2 = a.alloc(1)
+    pc.insert(_toks(5), p2)             # sibling leaf, more recent
+    a.free(p1 + p2)                        # producers release
+    assert a.in_use == 3 and pc.evictable_pages() == 3
+    # pin the older chain's leaf: its path becomes unevictable
+    leaf = pc.match(_toks(1, 2, 9))[-1]
+    pc.acquire([leaf])
+    assert pc.evictable_pages() == 1       # only the sibling
+    assert pc.evict(3) == 1                # pinned chain survives
+    assert pc.nodes == 2
+    a.free([leaf.page])                    # unpin
+    assert pc.evict(5) == 2                # leaf first, then its parent
+    assert pc.nodes == 0 and a.in_use == 0
+
+
+# ------------------------------------------------- refcount properties ----
+
+op_strategy = st.lists(
+    st.tuples(
+        st.integers(min_value=0, max_value=3),   # op kind
+        st.integers(min_value=0, max_value=5),   # seed / slot
+        st.integers(min_value=1, max_value=5),   # pages wanted
+    ),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=40, deadline=None)
+@given(op_strategy)
+def test_allocator_refcount_invariants_hold(ops):
+    """Satellite acceptance: through random admit/fork/free/evict
+    sequences, no page is ever both free and referenced, and the total
+    refcount equals page-table occupancy (slot-held pages) plus the
+    radix index's own pins."""
+    import itertools
+    ps = 4
+    alloc = PageAllocator(12)              # deliberately tight pool
+    pc = PrefixCache(alloc, page_size=ps)
+    slots: dict[int, list] = {}
+    next_id = itertools.count()
+
+    def check():
+        free = set(alloc._free)
+        held = {p for p in range(alloc.num_pages) if alloc.refcount(p) > 0}
+        assert not free & held, "page both free and referenced"
+        assert alloc.in_use == len(held)
+        occupancy = sum(len(pages) for pages in slots.values())
+        assert alloc.total_refs == occupancy + pc.nodes, \
+            (alloc.total_refs, occupancy, pc.nodes)
+
+    for kind, seed, want in ops:
+        if kind == 0:                      # admit: match, acquire, alloc
+            # prompts from 2 families with a shared head block => forks
+            blocks = [seed % 2, seed % 3 + 2, seed + 4][:max(want % 3, 1) + 1]
+            toks = np.concatenate([_toks(*blocks), _toks(9)[:1]])
+            shared = pc.acquire(pc.match(toks))
+            need = pages_for(len(toks), ps) - len(shared)
+            priv = alloc.alloc(need)
+            if priv is None and pc.evict(need - alloc.available()):
+                priv = alloc.alloc(need)
+            if priv is None:
+                if shared:
+                    alloc.free(shared)
+            else:
+                pages = shared + priv
+                pc.insert(toks, pages)
+                slots[next(next_id)] = pages
+        elif kind == 1 and slots:          # finish/evict a slot
+            key = sorted(slots)[seed % len(slots)]
+            alloc.free(slots.pop(key))
+        elif kind == 2:                    # capacity-pressure LRU evict
+            pc.evict(want)
+        check()
+    for pages in slots.values():           # drain
+        alloc.free(pages)
+    slots.clear()
+    pc.evict(alloc.num_pages)
+    check()
+    assert alloc.in_use == 0 and alloc.total_refs == 0
+
+
+# ------------------------------------------------------ engine reuse ----
+
+def _shared_reqs(cfg, n=4, sys_len=40, tail=6, max_new=6, **kw):
+    rng = np.random.default_rng(11)
+    system = rng.integers(2, cfg.vocab_size, sys_len).astype(np.int32)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [system,
+                         rng.integers(2, cfg.vocab_size, tail).astype(
+                             np.int32)]),
+                    max_new_tokens=max_new, **kw)
+            for i in range(n)]
+
+
+def _run(cfg, params, reqs, **engine_kw):
+    engine_kw.setdefault("prefill_buckets", (16, 32, 64))
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       decode_chunk=4, kv_page_size=8, **engine_kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    return eng
+
+
+def test_prefix_reuse_bit_identical_and_counted(tiny_model):
+    """Acceptance: greedy outputs with the prefix cache on are
+    bit-identical to the no-reuse paged path, prefix pages are shared
+    (hit/miss/reused-token counters), and finished requests leave their
+    prompt pages cached (held only by the index)."""
+    cfg, params = tiny_model
+    ref = _shared_reqs(cfg)
+    _run(cfg, params, ref)
+    got = _shared_reqs(cfg)
+    eng = _run(cfg, params, got, prefix_cache=True)
+    assert [r.output for r in got] == [r.output for r in ref]
+    m = eng.metrics
+    assert m.counter(METRIC_SERVE_PREFIX_HITS).value() == 3
+    assert m.counter(METRIC_SERVE_PREFIX_MISSES).value() == 1
+    # 40-token system prompt = 5 shared 8-line pages per hit
+    assert m.counter(METRIC_SERVE_PREFIX_REUSED_TOKENS).value() == 3 * 40
+    assert eng.prefix.nodes == 5
+    assert eng.allocator.in_use == 5       # cached pages outlive requests
+    assert eng.prefix.evictable_pages() == 5
+    assert eng._page_holders == {}         # no active holders remain
+
+
+def test_prefix_reuse_exact_length_prefill_matches(tiny_model):
+    """Reuse also works without buckets (exact-length suffix prefill)."""
+    cfg, params = tiny_model
+    ref = _shared_reqs(cfg, n=2)
+    _run(cfg, params, ref, prefill_buckets=None)
+    got = _shared_reqs(cfg, n=2)
+    eng = _run(cfg, params, got, prefill_buckets=None, prefix_cache=True)
+    assert [r.output for r in got] == [r.output for r in ref]
+    assert eng.metrics.counter(METRIC_SERVE_PREFIX_HITS).value() == 1
+
+
+def test_shared_pages_are_never_written(tiny_model):
+    """COW safety: decode and suffix prefill must never write through a
+    read-only shared mapping — the cached pages' pool lines are
+    byte-identical before and after sharing requests run."""
+    import jax
+    cfg, params = tiny_model
+    reqs = _shared_reqs(cfg, n=1)
+    eng = _run(cfg, params, reqs, prefix_cache=True)
+    cached = np.asarray([n.page for n in eng.prefix.match(
+        np.concatenate([reqs[0].prompt, np.zeros(9, np.int32)]))])
+    assert len(cached) == 5
+    before = [np.asarray(leaf[:, cached])
+              for leaf in jax.tree.leaves(eng.cache)]
+    more = _shared_reqs(cfg, n=3, max_new=10)
+    for r in more:
+        eng.submit(r)
+    eng.run_to_completion()
+    assert eng.metrics.counter(METRIC_SERVE_PREFIX_HITS).value() >= 3
+    after = [np.asarray(leaf[:, cached])
+             for leaf in jax.tree.leaves(eng.cache)]
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, a)
+
+
+def test_prefix_lru_eviction_under_pressure(tiny_model):
+    """A full pool whose pages are only index-held must yield to a new
+    request: unpinned cached prefixes LRU-evict back to the free pool
+    (counted), and admission's page gate sees them as available."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(3)
+    # pool: 8 usable pages; each 24-token prompt needs 3 + growth
+    eng = DecodeEngine(cfg, params, num_slots=1, cache_len=64,
+                       decode_chunk=4, kv_page_size=8, kv_pages=9,
+                       prefill_buckets=(32, 64), prefix_cache=True)
+    a = Request(rid=0, prompt=rng.integers(
+        2, cfg.vocab_size, 24).astype(np.int32), max_new_tokens=4)
+    eng.submit(a)
+    eng.run_to_completion()
+    assert a.done and eng.prefix.nodes == 3
+    b = Request(rid=1, prompt=rng.integers(
+        2, cfg.vocab_size, 50).astype(np.int32), max_new_tokens=4)
+    eng.submit(b)                          # needs 7 pages; only 5 free
+    eng.run_to_completion()
+    assert b.done
+    assert eng.metrics.counter(METRIC_SERVE_PREFIX_EVICTIONS).value() >= 1
+    assert eng.prefix.nodes < 3 + 6
+
+
+def test_shared_residency_bills_once_across_holders(tiny_model):
+    """Billing satellite: with two live holders every shared page bills
+    1/2 to each, so the tenant ledger's raw gres/kv_page consumption is
+    strictly lower than the no-reuse run of the same workload."""
+    cfg, params = tiny_model
+
+    def ledger(prefix_cache):
+        ctrl = AdmissionController()
+        reqs = _shared_reqs(cfg, n=2, max_new=8, tenant="acct")
+        eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                           admission=ctrl, decode_chunk=4, kv_page_size=8,
+                           prefill_buckets=(16, 32, 64),
+                           prefix_cache=prefix_cache)
+        for r in reqs:
+            eng.submit(r)
+        eng._admit()                       # both prefilled, none decoded
+        if prefix_cache:
+            shared = [n.page for n in eng.prefix.match(
+                np.concatenate([reqs[0].prompt, np.zeros(9, np.int32)]))]
+            assert all(eng._page_holders[p] == 2 for p in shared)
+        eng.run_to_completion()
+        return ctrl.tree.tres_usage_of("acct")["gres/kv_page"]
+
+    dup = ledger(False)
+    amortized = ledger(True)
+    assert amortized < 0.75 * dup, (amortized, dup)
+
+
+def test_preempted_victim_resumes_through_prefix_cache(tiny_model):
+    """A scavenger victim's resume prefill re-matches the cached prompt
+    prefix and still finishes with the undisturbed solo output."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(2, cfg.vocab_size, 24).astype(np.int32)
+    scav = Request(rid=0, prompt=prompt, max_new_tokens=24,
+                   tenant="a", qos="scavenger")
+    hi = Request(rid=1, prompt=prompt.copy(), max_new_tokens=24,
+                 tenant="b", qos="high")
+    eng = DecodeEngine(cfg, params, num_slots=1, cache_len=64,
+                       decode_chunk=4, kv_page_size=8,
+                       prefill_buckets=(32, 64), prefix_cache=True)
+    eng.submit(scav)
+    eng.step()
+    eng.submit(hi)                         # evicts scav from the only slot
+    eng.run_to_completion()
+    assert scav.done and hi.done and scav.preemptions >= 1
+    solo = Request(rid=2, prompt=prompt.copy(), max_new_tokens=24)
+    solo_eng = DecodeEngine(cfg, params, num_slots=1, cache_len=64,
+                            decode_chunk=4, kv_page_size=8,
+                            prefill_buckets=(32, 64))
+    solo_eng.submit(solo)
+    solo_eng.run_to_completion()
+    assert scav.output == solo.output == hi.output
+
+
+def test_no_livelock_when_match_is_the_only_eviction_fodder(tiny_model):
+    """Regression: when the private-page shortfall can only be covered
+    by the matched prefix pages themselves (everything else pinned by a
+    running request), placement must abandon the match and fall back to
+    a plain prefill instead of bouncing admit->pin->evict-nothing->
+    requeue forever."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(21)
+    base = rng.integers(2, cfg.vocab_size, 24).astype(np.int32)
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       decode_chunk=2, kv_page_size=8, kv_pages=9,
+                       prefill_buckets=(32, 64), prefix_cache=True)
+    seed = Request(rid=0, prompt=base, max_new_tokens=2)
+    eng.submit(seed)
+    eng.run_to_completion()                # index now holds base's 3 pages
+    assert seed.done and eng.prefix.nodes == 3
+    hog = Request(rid=1, prompt=rng.integers(
+        2, cfg.vocab_size, 8).astype(np.int32), max_new_tokens=40)
+    eng.submit(hog)
+    eng.step()                             # hog runs, pinning free pages
+    big = Request(rid=2, prompt=np.concatenate(
+        [base, rng.integers(2, cfg.vocab_size, 24).astype(np.int32)]),
+        max_new_tokens=2)
+    eng.submit(big)                        # needs 6 pages; matches 3
+    for _ in range(300):
+        if eng.step() == 0:
+            break
+    assert hog.done and big.done
+    assert eng.allocator.in_use == eng.prefix.nodes
+
+
+# -------------------------------------------------------- config errors ----
+
+def test_paged_config_errors_name_the_offending_field(tiny_model):
+    """Satellite: the paged-mode refusal names the config field instead
+    of the old generic 'non-sliding-window configs only'."""
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+    cfg, params = tiny_model
+    with pytest.raises(ValueError, match="cfg.sliding_window=8"):
+        DecodeEngine(dataclasses.replace(cfg, sliding_window=8), params,
+                     num_slots=1, cache_len=32, kv_page_size=8)
+    ssm_cfg = get_reduced_config("mamba2-780m")
+    with pytest.raises(ValueError, match="cfg.ssm="):
+        DecodeEngine(ssm_cfg, init_params(ssm_cfg, 0), num_slots=1,
+                     cache_len=32, kv_page_size=8)
+    with pytest.raises(ValueError, match="cfg.attn_every=2"):
+        DecodeEngine(dataclasses.replace(cfg, attn_every=2), params,
+                     num_slots=1, cache_len=32, kv_page_size=8)
+
+
+def test_prefix_cache_requires_paging(tiny_model):
+    cfg, params = tiny_model
+    with pytest.raises(ValueError, match="kv_page_size"):
+        DecodeEngine(cfg, params, num_slots=1, cache_len=32,
+                     prefix_cache=True)
+
+
+def test_cli_prefix_cache_implies_kv_paging(capsys):
+    from repro.launch.serve import (
+        DEFAULT_PREFIX_PAGE_SIZE, resolve_prefix_paging,
+    )
+    assert resolve_prefix_paging(False, 0) == 0
+    assert resolve_prefix_paging(False, 8) == 8
+    assert resolve_prefix_paging(True, 8) == 8
+    assert resolve_prefix_paging(True, 0) == DEFAULT_PREFIX_PAGE_SIZE
+    assert "implies --kv-paging" in capsys.readouterr().out
+
+
+# ------------------------------------------------------ bench baseline ----
+
+def test_update_baseline_round_trips_with_compare(tmp_path, monkeypatch):
+    """Satellite: --update-baseline writes the same schema --compare
+    reads, so refreshing the CI baseline is one flag, not a hand edit."""
+    from benchmarks.run import compare_against, write_results
+    path = tmp_path / "baseline.json"
+    write_results([("b1", 100.0, "x"), ("b2", 50.0, "y")], str(path))
+    rows = json.loads(path.read_text())
+    assert rows[0] == {"name": "b1", "us_per_call": 100.0, "derived": "x"}
+    # same speed: gate passes against the freshly-updated baseline
+    assert compare_against([("b1", 100.0, "x"), ("b2", 55.0, "y")],
+                           str(path)) == 0
+    assert compare_against([("b1", 130.0, "x")], str(path)) == 1
