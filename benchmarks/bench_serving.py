@@ -181,6 +181,82 @@ def bench_prefix_reuse(results: list):
     assert speedup >= 2.0, (full_t, reuse_t)
 
 
+def bench_latency_slo(results: list):
+    """Request-lifecycle tracing on a bursty two-tenant mixed-length
+    workload: records TTFT/ITL percentiles from the tracer's derived SLO
+    histograms into the bench JSON (so ``run.py --compare`` can gate on
+    p99 TTFT regressions) and asserts the tracer costs < 5% tok/s vs
+    tracing disabled.  The tracer attaches to an already-warm engine, so
+    both measurements run the same compiled programs."""
+    from repro.monitoring import Tracer
+    from repro.monitoring.trace import METRIC_SERVE_ITL, METRIC_SERVE_TTFT
+    from repro.serving import AdmissionController
+
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(7)
+    admission = AdmissionController()
+    admission.add_tenant("interactive", shares=4)
+    admission.add_tenant("batch", shares=1)
+    eng = DecodeEngine(cfg, params, num_slots=4, cache_len=128,
+                       decode_chunk=8, prefill_buckets="auto",
+                       admission=admission)
+
+    def make_requests():
+        reqs = []
+        for i in range(12):
+            short = i % 2 == 0
+            reqs.append(Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    8 if short else 48).astype(np.int32),
+                max_new_tokens=16,
+                tenant="interactive" if short else "batch",
+                qos="high" if short else "normal"))
+        return reqs
+
+    def serve_burst():
+        reqs = make_requests()
+        warm = int(eng.metrics.counter("serve_tokens_generated").value())
+        t0 = time.perf_counter()
+        for w in range(2):                       # two bursts: real queueing
+            for r in reqs[w * 6:(w + 1) * 6]:
+                eng.submit(r)
+            if w == 0:
+                eng.step()
+                eng.step()
+        eng.run_to_completion()
+        dt = time.perf_counter() - t0
+        toks = int(
+            eng.metrics.counter("serve_tokens_generated").value()) - warm
+        return toks / dt, dt
+
+    serve_burst()                                # absorb compile time
+    base_tps = max(serve_burst()[0] for _ in range(2))
+    tracer = Tracer()
+    eng.tracer = tracer                          # attach post-warm-up
+    eng.admission.tracer = tracer
+    traced = [serve_burst() for _ in range(2)]
+    traced_tps = max(t for t, _ in traced)
+    ttft = tracer.metrics.histogram(METRIC_SERVE_TTFT)
+    itl = tracer.metrics.histogram(METRIC_SERVE_ITL)
+    labels = {"tenant": "interactive", "qos": "high"}
+    assert ttft.count(**labels) > 0 and itl.count(**labels) > 0, \
+        "tracer recorded no interactive-tier SLO samples"
+    percentiles = {
+        "ttft_p50_ms": round(ttft.quantile(0.5, **labels) * 1e3, 3),
+        "ttft_p99_ms": round(ttft.quantile(0.99, **labels) * 1e3, 3),
+        "itl_p50_ms": round(itl.quantile(0.5, **labels) * 1e3, 3),
+        "itl_p99_ms": round(itl.quantile(0.99, **labels) * 1e3, 3),
+    }
+    results.append(("serving_latency_slo", traced[-1][1] * 1e6,
+                    f"{traced_tps:,.0f} tok/s traced vs {base_tps:,.0f} "
+                    f"untraced ({1 - traced_tps / base_tps:+.1%} overhead), "
+                    f"interactive TTFT p99 {percentiles['ttft_p99_ms']:.1f}ms",
+                    percentiles))
+    assert traced_tps >= 0.95 * base_tps, (base_tps, traced_tps)
+
+
 def bench_prefill_latency(results: list):
     import jax.numpy as jnp
     from repro.configs import RunConfig
@@ -210,4 +286,5 @@ def run(results: list):
     bench_prefill_bucketed(results)
     bench_paged_capacity(results)
     bench_prefix_reuse(results)
+    bench_latency_slo(results)
     bench_prefill_latency(results)

@@ -60,7 +60,7 @@ def main(argv=None) -> int:
               file=sys.stderr)
 
     print("name,us_per_call,derived")
-    for name, us, derived in results:
+    for name, us, derived, *_ in results:
         print(f"{name},{us:.1f},{derived}")
     if args.json:
         write_results(results, args.json)
@@ -83,12 +83,20 @@ BASELINE_PATH = "benchmarks/baseline.json"
 
 def write_results(results, path: str):
     """Serialize results in the artifact/baseline JSON schema (shared by
-    --json, --update-baseline, and the --compare reader)."""
+    --json, --update-baseline, and the --compare reader).  A benchmark
+    may append a 4th tuple element — a dict of named latency percentiles
+    (e.g. ``ttft_p99_ms``) — which lands under a ``percentiles`` key and
+    becomes part of the --compare regression gate."""
     import json
+    rows = []
+    for name, us, derived, *rest in results:
+        row = {"name": name, "us_per_call": round(us, 1),
+               "derived": derived}
+        if rest and rest[0]:
+            row["percentiles"] = rest[0]
+        rows.append(row)
     with open(path, "w") as f:
-        json.dump([{"name": name, "us_per_call": round(us, 1),
-                    "derived": derived}
-                   for name, us, derived in results], f, indent=2)
+        json.dump(rows, f, indent=2)
     print(f"[wrote {path}]", file=sys.stderr)
 
 
@@ -96,25 +104,39 @@ def compare_against(results, baseline_path: str,
                     threshold: float = 0.20) -> int:
     """CI regression gate: compare this run against a ``--json`` baseline
     artifact and fail (exit 1) on any >``threshold`` slowdown — i.e. a
-    >20%% throughput drop by default.  Benchmarks present on only one
-    side are reported but never fail the gate (suites evolve)."""
+    >20%% throughput drop by default.  Percentile keys a benchmark
+    records (e.g. ``serving_latency_slo``'s ``ttft_p99_ms``) gate at the
+    same threshold when present on BOTH sides, so a p99 TTFT regression
+    fails CI even if mean throughput held.  Benchmarks (or percentile
+    keys) present on only one side are reported but never fail the gate
+    (suites evolve)."""
     import json
     with open(baseline_path) as f:
-        base = {row["name"]: row["us_per_call"] for row in json.load(f)}
+        rows = json.load(f)
+    base = {row["name"]: row["us_per_call"] for row in rows}
+    base_pct = {row["name"]: row.get("percentiles", {}) for row in rows}
     regressions = []
-    for name, us, _ in results:
+
+    def check(label, old, new):
+        ratio = new / old if old > 0 else 1.0
+        verdict = "REGRESSION" if ratio > 1.0 + threshold else "ok"
+        print(f"[compare] {label}: {old:.1f} -> {new:.1f} "
+              f"({ratio:.2f}x) {verdict}", file=sys.stderr)
+        if ratio > 1.0 + threshold:
+            regressions.append((label, old, new, ratio))
+
+    for name, us, _, *rest in results:
         old = base.get(name)
         if old is None:
             print(f"[compare] {name}: no baseline (new benchmark)",
                   file=sys.stderr)
             continue
-        ratio = us / old if old > 0 else 1.0
-        verdict = "REGRESSION" if ratio > 1.0 + threshold else "ok"
-        print(f"[compare] {name}: {old:.1f} -> {us:.1f} us "
-              f"({ratio:.2f}x) {verdict}", file=sys.stderr)
-        if ratio > 1.0 + threshold:
-            regressions.append((name, old, us, ratio))
-    missing = sorted(set(base) - {name for name, _, _ in results})
+        check(name, old, us)
+        pct = rest[0] if rest else {}
+        old_pct = base_pct.get(name, {})
+        for key in sorted(set(pct) & set(old_pct)):
+            check(f"{name}.{key}", old_pct[key], pct[key])
+    missing = sorted(set(base) - {row[0] for row in results})
     for name in missing:
         print(f"[compare] {name}: in baseline but not run",
               file=sys.stderr)

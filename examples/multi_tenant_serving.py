@@ -22,13 +22,21 @@ request below waits at most one chunk before evicting its victim.  See
 README "Serving fast path" for decode-chunk semantics and the prefill
 bucket table.
 
+A :class:`~repro.monitoring.Tracer` rides along (README
+"Observability"): every request's SUBMIT/QUEUED/PREFILL/DECODE/PREEMPT/
+RESUME/FINISH lifecycle lands as spans — the preemption below shows up
+as TWO decode segments on the victim's lane — and the derived SLO
+histograms power the per-tenant TTFT/ITL report printed at the end.
+Pass a path to ``tracer.export_chrome(...)`` to inspect the timeline in
+ui.perfetto.dev; ``--trace`` on ``repro.launch.serve`` does the same.
+
 Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
 """
 import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.models import init_params
-from repro.monitoring import MetricsRegistry
+from repro.monitoring import MetricsRegistry, Tracer
 from repro.monitoring.metrics import (
     METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_TENANT_TOKENS,
 )
@@ -39,14 +47,16 @@ def main():
     cfg = get_reduced_config("stablelm-3b")
     params = init_params(cfg, 0)
     metrics = MetricsRegistry()
+    tracer = Tracer(metrics=metrics)           # opt-in lifecycle tracing
 
     print("== tenants: prod (8 shares) vs research (1 share) ==")
-    admission = AdmissionController()
+    admission = AdmissionController(tracer=tracer)
     admission.add_tenant("prod", shares=8)
     admission.add_tenant("research", shares=1)
     engine = DecodeEngine(cfg, params, num_slots=2, cache_len=128,
                           metrics=metrics, admission=admission,
-                          decode_chunk=4, prefill_buckets="auto")
+                          decode_chunk=4, prefill_buckets="auto",
+                          tracer=tracer)
 
     rng = np.random.default_rng(0)
 
@@ -75,8 +85,13 @@ def main():
           f"{metrics.counter(METRIC_SERVE_PREEMPTIONS).value():.0f}  "
           f"(victim rid={victim.rid} keeps {len(victim.output)} tokens)\n")
 
+
     engine.run_to_completion()                 # drain the sweeps
     assert urgent.done and all(r.done for r in sweeps)
+    segs = tracer.spans(name="DECODE",
+                        track=("serving:research", f"req {victim.rid}"))
+    print(f"victim's trace: {len(segs)} decode segments "
+          f"(preempt -> resume split on one request lane)\n")
 
     print("== sustained load converges toward the 8:1 share ratio ==")
     tok = metrics.counter(METRIC_SERVE_TENANT_TOKENS)
@@ -100,6 +115,9 @@ def main():
     for name in ("prod", "research"):
         print(f"{name:<10} usage={admission.tree.usage[name]:10.1f} "
               f"fairshare={admission.tree.fair_share_factor(name):.4f}")
+
+    print("\n== per-tenant SLO percentiles (sdiag's serving section) ==")
+    print(tracer.slo.format_report())
 
 
 if __name__ == "__main__":

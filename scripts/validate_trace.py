@@ -1,0 +1,69 @@
+"""Validate a Chrome trace-event JSON artifact (CI gate for --trace).
+
+Checks the properties Perfetto/chrome://tracing rely on: the file parses,
+``traceEvents`` is non-empty, every event carries the required keys for
+its phase, timestamps are monotonically ordered, and every ``parent_sid``
+refers to a span that exists.  Usage::
+
+    python scripts/validate_trace.py serve_trace.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def validate(path: str) -> list[str]:
+    errors: list[str] = []
+    with open(path) as f:
+        data = json.load(f)
+    events = data.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: traceEvents missing or empty"]
+    spans = [e for e in events if e.get("ph") == "X"]
+    if not spans:
+        errors.append(f"{path}: no complete ('X') span events")
+    last_ts = None
+    sids = {e["args"]["sid"] for e in spans if "sid" in e.get("args", {})}
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph == "M":
+            continue
+        for key in ("name", "ts", "pid", "tid"):
+            if key not in e:
+                errors.append(f"event {i}: missing {key!r}")
+        if ph == "X" and "dur" not in e:
+            errors.append(f"event {i} ({e.get('name')}): 'X' without dur")
+        ts = e.get("ts")
+        if ts is not None:
+            if last_ts is not None and ts < last_ts:
+                errors.append(f"event {i} ({e.get('name')}): ts {ts} < "
+                              f"previous {last_ts} (not sorted)")
+            last_ts = ts
+        parent = e.get("args", {}).get("parent_sid")
+        if parent is not None and parent not in sids:
+            errors.append(f"event {i} ({e.get('name')}): parent_sid "
+                          f"{parent} not in trace")
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or []
+    if not paths:
+        print("usage: validate_trace.py TRACE_JSON [...]", file=sys.stderr)
+        return 2
+    rc = 0
+    for path in paths:
+        errs = validate(path)
+        if errs:
+            rc = 1
+            for e in errs:
+                print(f"[validate_trace] {e}", file=sys.stderr)
+        else:
+            n = len(json.load(open(path))["traceEvents"])
+            print(f"[validate_trace] {path}: ok ({n} events)")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,6 +23,7 @@ cancelled, per the victim QOS's ``preempt_mode``.
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -83,6 +84,12 @@ class Cluster:
         self.accounting: list[AccountingRecord] = []
         self._next_id = itertools.count(1)
         self.metrics = None            # optional monitoring registry hook
+        self.tracer = None             # optional lifecycle tracer hook
+        # sdiag-style scheduler statistics: wall time per schedule_pass
+        # (the virtual clock stamps the spans; these stats time the REAL
+        # cost of a controller cycle, what SLURM's sdiag reports)
+        self.sched_stats = {"passes": 0, "last_us": 0.0, "total_us": 0.0,
+                            "max_us": 0.0, "starts": 0}
         self.fairshare = fairshare or FairShareTree()
         self.qos_table = dict(qos_table) if qos_table is not None \
             else default_qos_table()
@@ -143,6 +150,7 @@ class Cluster:
             if not job.state.finished:
                 self._active[jid] = job
             self._refresh_dependency(job)
+            self._trace_job_submit(job)
             ids.append(jid)
         self.schedule()
         return ids
@@ -157,6 +165,7 @@ class Cluster:
         else:
             job.state = JobState.CANCELLED
             job.end_time = self.clock
+            self._trace_job_close(job, "CANCELLED")
             self._retire(job)
             self._account(job)
         self.schedule()
@@ -185,7 +194,54 @@ class Cluster:
                 job.reason = "BeginTime"
                 job.start_time = None
                 job.nodes_alloc = ()
+                self._trace_job_state(job, "PENDING", reason="NodeDown")
         self.schedule()
+
+    # ----------------------------------------------------------- tracing ----
+    # Job lifecycle spans share the serving tracer's timeline; the virtual
+    # clock stamps them (ts=self.clock), so simulated jobs and wall-clock
+    # serving requests render side by side in Perfetto.  One root span per
+    # job, with back-to-back state child spans (PENDING/RUNNING/...).
+    def _trace_job_submit(self, job: Job):
+        tr = self.tracer
+        if tr is None or job.state.finished:
+            return
+        root = tr.begin(f"job {job.job_id}", cat="job",
+                        track=(f"cluster:{job.account}",
+                               f"job {job.job_id}"),
+                        ts=self.clock, job_name=job.name, user=job.user,
+                        partition=job.partition, qos=job.qos,
+                        account=job.account)
+        tr.event("SUBMIT", root, ts=self.clock)
+        state = tr.begin("PENDING", cat="state", parent=root,
+                         ts=self.clock, reason=job.reason)
+        job._trace = {"root": root, "state": state}
+
+    def _trace_job_state(self, job: Job, name: str, **attrs):
+        """End the current state span, open the next one."""
+        tr = self.tracer
+        trace = getattr(job, "_trace", None)
+        if tr is None or not trace:
+            return
+        cur = trace.pop("state", None)
+        if cur is not None:
+            tr.end(cur, ts=self.clock)
+        trace["state"] = tr.begin(name, cat="state", parent=trace["root"],
+                                  ts=self.clock, **attrs)
+
+    def _trace_job_close(self, job: Job, state: str):
+        """Terminal transition: close the state span and the root."""
+        tr = self.tracer
+        trace = getattr(job, "_trace", None)
+        if tr is None or not trace:
+            return
+        cur = trace.pop("state", None)
+        if cur is not None:
+            tr.end(cur, ts=self.clock)
+        root = trace.pop("root", None)
+        if root is not None:
+            tr.event(state, root, ts=self.clock)
+            tr.end(root, ts=self.clock, state=state)
 
     # --------------------------------------------------------- scheduling ----
     def _retire(self, job: Job):
@@ -212,6 +268,7 @@ class Cluster:
                     job.state = JobState.CANCELLED   # DependencyNeverSatisfied
                     job.end_time = self.clock
                     job.reason = "DependencyNeverSatisfied"
+                    self._trace_job_close(job, "CANCELLED")
                     self._retire(job)
                     self._account(job)
                     return
@@ -221,6 +278,7 @@ class Cluster:
                     job.state = JobState.CANCELLED
                     job.end_time = self.clock
                     job.reason = "DependencyNeverSatisfied"
+                    self._trace_job_close(job, "CANCELLED")
                     self._retire(job)
                     self._account(job)
                     return
@@ -239,10 +297,18 @@ class Cluster:
         for _ in range(_MAX_PREEMPT_ROUNDS):
             priority_fn = self.priority_engine.priority_fn(
                 self.clock, self.partitions, len(self.nodes))
+            t0 = time.perf_counter()
             decision = schedule_pass(
                 self.clock, self._pending(), self._running(), self.nodes,
                 self.partitions, self.sched_mode, priority_fn=priority_fn,
-                qos_table=self.qos_table)
+                qos_table=self.qos_table, tracer=self.tracer)
+            dt_us = (time.perf_counter() - t0) * 1e6
+            st = self.sched_stats
+            st["passes"] += 1
+            st["last_us"] = dt_us
+            st["total_us"] += dt_us
+            st["max_us"] = max(st["max_us"], dt_us)
+            st["starts"] += len(decision.starts)
             for job_id, alloc in decision.starts:
                 self._start(self.jobs[job_id], alloc)
             for job_id, reason in decision.holds:
@@ -290,6 +356,7 @@ class Cluster:
         job.start_time = self.clock
         job.nodes_alloc = alloc
         job.reason = ""
+        self._trace_job_state(job, "RUNNING", nodes=len(alloc))
         if self.real_mode and job.script is not None:
             try:
                 job.result = job.script(job, alloc)
@@ -310,6 +377,7 @@ class Cluster:
         job.end_time = self.clock
         if job.exit_code is None:
             job.exit_code = 0 if state == JobState.COMPLETED else 1
+        self._trace_job_close(job, state.name)
         self._retire(job)
         self._account(job)
 
@@ -334,12 +402,16 @@ class Cluster:
             job.reason = f"PreemptedBy={by_job_id}"
             if job.exit_code is None:
                 job.exit_code = 1
+            self._trace_job_close(job, "CANCELLED")
             self._retire(job)
             self._account(job)
             return
         # requeue path: one accounting row for the evicted segment
         job.state = JobState.PREEMPTED
         job.reason = f"PreemptedBy={by_job_id}"
+        # zero-length PREEMPTED state between RUNNING and the requeued
+        # PENDING: both transitions happen at the same virtual instant
+        self._trace_job_state(job, "PREEMPTED", by=by_job_id)
         self._account(job)
         job.record_preemption(elapsed)
         self._restore_progress(job)
@@ -348,6 +420,7 @@ class Cluster:
         job.start_time = None
         job.end_time = None
         job.nodes_alloc = ()
+        self._trace_job_state(job, "PENDING", reason="Requeued")
 
     def _restore_progress(self, job: Job):
         """Checkpoint-restore hook: a preempted job with a checkpoint dir
@@ -439,6 +512,9 @@ class Cluster:
         c.accounting = snap["accounting"]
         c._next_id = itertools.count(snap["next_id"])
         c.metrics = None
+        c.tracer = None
+        c.sched_stats = {"passes": 0, "last_us": 0.0, "total_us": 0.0,
+                         "max_us": 0.0, "starts": 0}
         c.fairshare = FairShareTree.restore(
             snap.get("fairshare", FairShareTree().snapshot()))
         c.qos_table = dict(snap.get("qos_table") or default_qos_table())

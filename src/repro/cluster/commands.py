@@ -326,6 +326,44 @@ def sshare(cluster: Cluster, tres: bool = False) -> str:
     return "\n".join(rows)
 
 
+def sdiag(cluster: Optional[Cluster] = None, tracer=None,
+          admission=None) -> str:
+    """``sdiag``-style diagnostics: scheduler cycle statistics (from the
+    cluster controller), admission-controller cycle statistics (from the
+    serving layer), and per-tenant serving SLO percentiles (from the
+    tracer's derived histograms).  Any subset of sources may be given;
+    sections for absent sources are simply omitted."""
+    sections = []
+    if cluster is not None:
+        st = cluster.sched_stats
+        mean = st["total_us"] / st["passes"] if st["passes"] else 0.0
+        sections.append("\n".join([
+            "Main schedule statistics (microseconds):",
+            f"\tTotal cycles:     {st['passes']}",
+            f"\tLast cycle:       {st['last_us']:.0f}",
+            f"\tMean cycle:       {mean:.0f}",
+            f"\tMax cycle:        {st['max_us']:.0f}",
+            f"\tJobs started:     {st['starts']}",
+            f"\tJobs pending:     {len(cluster._pending())}",
+            f"\tJobs running:     {len(cluster._running())}",
+            f"\tPreemptions:      {cluster.preemptions_total}",
+        ]))
+    if admission is not None:
+        st = admission.stats
+        sections.append("\n".join([
+            "Admission controller statistics:",
+            f"\tCycles:           {st['cycles']}",
+            f"\tPicks:            {st['picks']}",
+            f"\tPreemptive picks: {st['preempt_picks']}",
+            f"\tRequeues:         {st['requeues']}",
+            f"\tQueued now:       {admission.pending()}",
+        ]))
+    if tracer is not None:
+        sections.append("Serving SLO (per tenant/QOS):\n"
+                        + tracer.slo.format_report())
+    return "\n\n".join(sections) if sections else "sdiag: nothing to report"
+
+
 def sprio(cluster: Cluster) -> str:
     """``sprio -l``: multifactor priority breakdown for pending jobs."""
     rows = [f"{'JOBID':<8}{'USER':<10}{'ACCOUNT':<10}{'PRIORITY':>9}"

@@ -224,10 +224,15 @@ def schedule_pass(now: float, pending: list[Job], running: list[Job],
                   mode: str = "easy",
                   priority_fn: Optional[Callable[[Job], float]] = None,
                   qos_table: Optional[dict[str, QOS]] = None,
-                  preemption_enabled: bool = True) -> Decision:
+                  preemption_enabled: bool = True,
+                  tracer=None) -> Decision:
     """One scheduling cycle.  Mutates nothing; returns the decision."""
     assert mode in ("easy", "conservative", "fifo")
     qos_table = qos_table or {}
+    sp = tracer.begin("schedule_pass", cat="scheduler",
+                      track=("cluster:scheduler", "passes"), ts=now,
+                      mode=mode, pending=len(pending),
+                      running=len(running)) if tracer is not None else None
 
     def rank(j: Job) -> tuple:
         """Ascending sort => best job first."""
@@ -295,5 +300,12 @@ def schedule_pass(now: float, pending: list[Job], running: list[Job],
         if res is not None:
             reservations.append(res)
 
-    return Decision(tuple(starts), tuple(reservations), tuple(preemptions),
-                    tuple(holds))
+    decision = Decision(tuple(starts), tuple(reservations),
+                        tuple(preemptions), tuple(holds))
+    if sp is not None:
+        # virtual-clock spans are zero-length on the timeline; the
+        # decision counts ride along as attributes
+        tracer.end(sp, ts=now, starts=len(starts),
+                   reservations=len(reservations),
+                   preemptions=len(preemptions), holds=len(holds))
+    return decision

@@ -124,6 +124,17 @@ def main(argv=None) -> int:
     ap.add_argument("--shares", default="",
                     help="shares for --tenants given as bare names, "
                          "e.g. --tenants alice,bob --shares 8,1")
+    ap.add_argument("--qos", default="",
+                    help="comma list of QOS tiers cycled across requests "
+                         "(e.g. high,scavenger); empty = all 'normal'")
+    ap.add_argument("--bursts", type=int, default=1,
+                    help="submit the workload in N bursts with a few "
+                         "decode steps between waves (exercises queueing "
+                         "and the queue-wait/TTFT series)")
+    ap.add_argument("--trace", default="", metavar="OUT_JSON",
+                    help="record request-lifecycle spans and write a "
+                         "Chrome trace-event JSON (load in Perfetto or "
+                         "chrome://tracing); also prints the SLO report")
     args = ap.parse_args(argv)
 
     import jax
@@ -136,7 +147,11 @@ def main(argv=None) -> int:
     metrics = MetricsRegistry()
     tenants = parse_tenants(args.tenants, args.shares) if args.tenants \
         else {"default": 1}
-    admission = AdmissionController()
+    tracer = None
+    if args.trace:
+        from repro.monitoring import Tracer
+        tracer = Tracer(metrics=metrics)
+    admission = AdmissionController(tracer=tracer)
     for name, share in tenants.items():
         admission.add_tenant(name, shares=share)
     use_pallas = resolve_use_pallas(args.use_pallas, jax.default_backend())
@@ -150,24 +165,37 @@ def main(argv=None) -> int:
                           prefill_buckets=parse_buckets(args.prefill_buckets),
                           kv_page_size=kv_paging,
                           kv_pages=args.kv_pages,
-                          prefix_cache=args.prefix_cache)
+                          prefix_cache=args.prefix_cache,
+                          tracer=tracer)
     rng = np.random.default_rng(args.seed)
     names = list(tenants)
+    qos_cycle = [q.strip() for q in args.qos.split(",") if q.strip()] \
+        or ["normal"]
     assert args.shared_prefix < args.cache_len, "--shared-prefix too long"
     system = rng.integers(2, cfg.vocab_size,
                           args.shared_prefix).astype(np.int32)
+    requests = []
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.cache_len // 4))
         prompt = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
         if args.shared_prefix:
             prompt = np.concatenate([system, prompt])[:args.cache_len - 1]
-        engine.submit(Request(
+        requests.append(Request(
             rid=rid,
             prompt=prompt,
             max_new_tokens=args.max_new,
             temperature=float(rid % 2) * 0.8,
-            tenant=names[rid % len(names)]))
+            tenant=names[rid % len(names)],
+            qos=qos_cycle[rid % len(qos_cycle)]))
+    bursts = max(args.bursts, 1)
+    per_wave = -(-len(requests) // bursts)       # ceil division
     t0 = time.perf_counter()
+    for w in range(bursts):
+        for req in requests[w * per_wave:(w + 1) * per_wave]:
+            engine.submit(req)
+        if w < bursts - 1:
+            for _ in range(3):                    # let the wave decode a bit
+                engine.step()
     engine.run_to_completion()
     wall = time.perf_counter() - t0
     total = int(metrics.counter("serve_tokens_generated").value())
@@ -205,6 +233,12 @@ def main(argv=None) -> int:
           f"ms  p99 "
           f"{metrics.histogram('serve_decode_seconds').quantile(0.99)*1e3:.1f}"
           f"ms")
+    if tracer is not None:
+        data = tracer.export_chrome(args.trace)
+        from repro.cluster.commands import sdiag
+        print(f"trace: {len(data['traceEvents'])} events -> {args.trace} "
+              f"(load in ui.perfetto.dev)")
+        print(sdiag(admission=admission, tracer=tracer))
     return 0
 
 

@@ -1,5 +1,13 @@
 from repro.monitoring.metrics import (
-    Counter, Gauge, Histogram, MetricsRegistry, Timer,
+    LATENCY_BUCKETS, Counter, Gauge, Histogram, MetricsRegistry, Timer,
+)
+from repro.monitoring.trace import (
+    DEFAULT_SLO_TARGETS, SLORecorder, SLOTarget, Span, SpanEvent, Tracer,
 )
 
-__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "Timer"]
+__all__ = [
+    "Counter", "Gauge", "Histogram", "LATENCY_BUCKETS", "MetricsRegistry",
+    "Timer",
+    "DEFAULT_SLO_TARGETS", "SLORecorder", "SLOTarget", "Span", "SpanEvent",
+    "Tracer",
+]

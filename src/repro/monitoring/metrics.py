@@ -19,6 +19,14 @@ _DEFAULT_BUCKETS = (
     0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 50.0, 100.0,
     float("inf"))
 
+#: Latency-tuned preset for request-level SLO series (queue wait, TTFT,
+#: inter-token latency, end-to-end): sub-millisecond resolution at the
+#: fast end, where the default preset's decade-wide buckets would smear
+#: every interactive-tier percentile into one bin.
+LATENCY_BUCKETS = (
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 30.0, float("inf"))
+
 # Canonical series names for the SLURM layer (what the paper's §6.1
 # Prometheus would scrape from slurmctld exporters).  The cluster engine
 # exports these; dashboards/tests key off the constants, not string
@@ -58,10 +66,20 @@ def _labels_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))
 
 
+def _escape_label_value(value) -> str:
+    """Prometheus exposition-format label-value escaping: backslash,
+    double-quote, and newline must be escaped or the scrape text is
+    invalid (a tenant named ``acme "prod"`` would otherwise break every
+    series it labels)."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _labels_text(labels: dict) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"'
+                     for k, v in sorted(labels.items()))
     return "{" + inner + "}"
 
 
@@ -139,18 +157,32 @@ class Histogram:
         return self._sum.get(_labels_key(labels), 0.0)
 
     def quantile(self, q: float, **labels) -> float:
-        """Approximate quantile from bucket boundaries."""
+        """Approximate quantile from bucket boundaries, linearly
+        interpolated within the terminal bucket (Prometheus
+        ``histogram_quantile`` semantics) — 100 observations of 3ms in
+        the (1ms, 5ms] bucket report ~3ms, not the 5ms upper bound.  The
+        +Inf bucket has no upper bound to interpolate toward, so values
+        landing there report the last finite boundary."""
         counts = self._counts.get(_labels_key(labels))
         if not counts:
             return math.nan
         total = sum(counts)
         target = q * total
         acc = 0
-        for b, c in zip(self.buckets, counts):
+        for i, (b, c) in enumerate(zip(self.buckets, counts)):
+            prev = acc
             acc += c
             if acc >= target:
-                return b
+                lo = self.buckets[i - 1] if i > 0 else 0.0
+                if math.isinf(b) or c == 0:
+                    return lo
+                return lo + (b - lo) * (target - prev) / c
         return self.buckets[-2]
+
+    def label_sets(self) -> list[dict]:
+        """Every label combination this histogram has observed — lets
+        dashboards/reports enumerate series without poking ``_counts``."""
+        return [dict(key) for key in sorted(self._counts)]
 
     def expose(self) -> list[str]:
         out = [f"# HELP {self.name} {self.help}",
@@ -194,6 +226,11 @@ class MetricsRegistry:
                   buckets=_DEFAULT_BUCKETS) -> Histogram:
         return self._get(Histogram, name, help_, buckets=buckets)
 
+    def timer(self, name: str, help_: str = "", **labels) -> Timer:
+        """The ``with registry.timer(...)`` factory Timer's docstring
+        advertises: times the with-block into the named histogram."""
+        return Timer(self.histogram(name, help_), dict(labels))
+
     def expose(self) -> str:
         """Prometheus text exposition format (what :9090 would scrape)."""
         lines = []
@@ -202,18 +239,30 @@ class MetricsRegistry:
         return "\n".join(lines) + "\n"
 
     def dashboard(self, width: int = 60) -> str:
-        """ASCII Grafana: one bar per gauge/counter series."""
+        """ASCII Grafana: one bar per gauge/counter series, plus one
+        summary row per histogram series (count, sum, p50/p99)."""
         rows = []
         vals = []
+        hists = []
         for name in sorted(self._metrics):
             m = self._metrics[name]
             if isinstance(m, (Counter, Gauge)):
                 for key, v in sorted(m._vals.items()):
                     vals.append((f"{name}{_labels_text(dict(key))}", v))
+            elif isinstance(m, Histogram):
+                for labels in m.label_sets():
+                    hists.append((f"{name}{_labels_text(labels)}", m,
+                                  labels))
         peak = max((abs(v) for _, v in vals), default=1.0) or 1.0
         for label, v in vals:
             bar = "#" * int(width * abs(v) / peak)
             rows.append(f"{label:<44} {v:>12.3f} |{bar}")
+        for label, m, labels in hists:
+            rows.append(
+                f"{label:<44} n={m.count(**labels):<8d} "
+                f"sum={m.sum(**labels):<12.3f} "
+                f"p50={m.quantile(0.5, **labels):.4f} "
+                f"p99={m.quantile(0.99, **labels):.4f}")
         return "\n".join(rows)
 
 

@@ -106,7 +106,7 @@ class AdmissionController:
                  qos_table: Optional[dict[str, QOS]] = None,
                  weights: Optional[PriorityWeights] = None,
                  wall_clock_decay: bool = False,
-                 clock=time.monotonic):
+                 clock=time.monotonic, tracer=None):
         self.tree = tree if tree is not None else FairShareTree()
         for key, w in SERVING_TRES_WEIGHTS.items():
             self.tree.tres_weights.setdefault(key, w)
@@ -117,6 +117,12 @@ class AdmissionController:
         self.weights = weights or PriorityWeights()
         self.tenants: dict[str, Tenant] = {}
         self._seq = itertools.count()      # global FIFO arrival order
+        #: optional repro.monitoring.Tracer — QUEUED spans, queue-wait
+        #: SLO series, and pick-reason attributes hang off it
+        self.tracer = tracer
+        #: admission cycle statistics, the `sdiag` admission section
+        self.stats = {"cycles": 0, "picks": 0, "preempt_picks": 0,
+                      "requeues": 0}
 
     # ----------------------------------------------------------- tenants ----
     def add_tenant(self, name: str, shares: int = 1) -> Tenant:
@@ -150,6 +156,7 @@ class AdmissionController:
         t = self.add_tenant(req.tenant)
         req._seq = next(self._seq)
         bisect.insort(t.queue, req, key=self._order_key)
+        self._trace_enqueue(req)
 
     def requeue(self, req):
         """A preempted request goes back into its tenant's queue with
@@ -158,6 +165,48 @@ class AdmissionController:
         higher-QOS arrival may still outrank it — by design)."""
         bisect.insort(self.tenants[req.tenant].queue, req,
                       key=self._order_key)
+        self.stats["requeues"] += 1
+        self._trace_enqueue(req, resumed=True)
+
+    # ----------------------------------------------------------- tracing ----
+    def _trace_enqueue(self, req, resumed: bool = False):
+        """Open a QUEUED span for a (re)enqueued request: closed by the
+        pick that admits it, its duration IS the queue wait."""
+        tr = self.tracer
+        if tr is None:
+            return
+        trace = getattr(req, "_trace", None)
+        if trace is None:
+            trace = req._trace = {}
+        root = trace.get("root")
+        track = root.track if root is not None else (
+            f"serving:{req.tenant}", f"req {getattr(req, 'rid', '?')}")
+        trace["queued"] = tr.begin("QUEUED", cat="queue", track=track,
+                                   parent=root, resumed=resumed,
+                                   qos=req.qos)
+
+    def _trace_pick(self, req, reason: str):
+        """Close the QUEUED span with the pick reason and feed the
+        queue-wait SLO series (admit timestamp stamps the request — the
+        engine's TTFT measurement starts here)."""
+        self.stats["picks"] += 1
+        if reason == "preemption":
+            self.stats["preempt_picks"] += 1
+        tr = self.tracer
+        if tr is None:
+            return
+        now = tr.clock()
+        req._t_admit = now
+        trace = getattr(req, "_trace", None)
+        queued = trace.pop("queued", None) if trace else None
+        if queued is not None:
+            wait = now - queued.start
+            tr.end(queued, ts=now, pick_reason=reason,
+                   fairshare=round(
+                       self.tree.fair_share_factor(req.tenant), 4))
+        else:
+            wait = 0.0
+        tr.slo.queue_wait(wait, req.tenant, req.qos)
 
     def pending(self) -> int:
         return sum(len(t.queue) for t in self.tenants.values())
@@ -216,11 +265,13 @@ class AdmissionController:
         passes "does the prefill fit the free page pool", so a big
         blocked request does not starve admissible small ones.
         """
+        self.stats["cycles"] += 1
         t = self._best_tenant(eligible=eligible)
         if t is None:
             return None
         req = t.queue.pop(0)
         t.slots_by_qos[req.qos] = t.slots_by_qos.get(req.qos, 0) + 1
+        self._trace_pick(req, "fairshare")
         return req
 
     def release(self, req):
@@ -275,6 +326,7 @@ class AdmissionController:
             return qos is not None and any(
                 qos.can_preempt(v) for v in running_qos)
 
+        self.stats["cycles"] += 1
         t = self._best_tenant(eligible=can_preempt_now)
         if t is None:
             return None
@@ -284,6 +336,7 @@ class AdmissionController:
             [r for r in running if qos.can_preempt(r.qos)])
         t.queue.pop(0)
         t.slots_by_qos[head.qos] = t.slots_by_qos.get(head.qos, 0) + 1
+        self._trace_pick(head, "preemption")
         return head, victim
 
     # ---------------------------------------------------------- charging ----

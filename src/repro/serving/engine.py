@@ -78,7 +78,7 @@ from repro.models.model import decode_n, decode_step, prefill_suffix
 from repro.models.paging import (
     NULL_PAGE, PageAllocator, PagedKVConfig, pages_for,
 )
-from repro.monitoring import MetricsRegistry
+from repro.monitoring import MetricsRegistry, Tracer
 from repro.monitoring.metrics import (
     METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_PREFIX_EVICTIONS,
     METRIC_SERVE_PREFIX_HITS, METRIC_SERVE_PREFIX_MISSES,
@@ -107,6 +107,11 @@ class Request:
     _seq: int = field(default=0, repr=False)   # admission arrival order
     _slot: int = field(default=-1, repr=False)  # current decode slot (-1 = none)
     _est_pages: int = field(default=0, repr=False)  # paged: worst-case pages
+    # lifecycle tracing (populated only when the engine has a tracer)
+    _trace: dict = field(default_factory=dict, repr=False)  # open spans
+    _t_submit: Optional[float] = field(default=None, repr=False)
+    _t_admit: Optional[float] = field(default=None, repr=False)
+    _t_last: Optional[float] = field(default=None, repr=False)  # last token
 
 
 class DecodeEngine:
@@ -118,7 +123,8 @@ class DecodeEngine:
                  prefill_buckets: Union[None, str, Sequence[int]] = None,
                  kv_page_size: int = 0,
                  kv_pages: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 tracer: Optional[Tracer] = None):
         self.cfg = cfg
         self.params = params
         self.run = run or RunConfig(remat="none")
@@ -127,6 +133,12 @@ class DecodeEngine:
         self.metrics = metrics or MetricsRegistry()
         self.admission = admission if admission is not None \
             else AdmissionController()
+        # request-lifecycle tracer (opt-in; None = zero overhead).  The
+        # admission controller writes QUEUED spans / queue-wait series
+        # into the same tracer unless it already has its own.
+        self.tracer = tracer
+        if tracer is not None and self.admission.tracer is None:
+            self.admission.tracer = tracer
         self.decode_chunk = max(1, int(decode_chunk))
         self.fused = fused
         self.paging = self._resolve_paging(kv_page_size, kv_pages)
@@ -349,12 +361,46 @@ class DecodeEngine:
         0 there."""
         return int(self._prefill_fn._cache_size())
 
+    # ----------------------------------------------------------- tracing ----
+    def _trace_root(self, req: Request):
+        trace = getattr(req, "_trace", None)
+        return trace.get("root") if trace else None
+
+    def _trace_decode_end(self, req: Request, reason: Optional[str] = None):
+        """Close the request's current DECODE span (finish, preemption,
+        or page starvation); ``reason`` also lands as a root-span event,
+        so PREEMPT/STARVED transitions are visible on the timeline."""
+        tr = self.tracer
+        if tr is None:
+            return
+        trace = getattr(req, "_trace", None)
+        if not trace:
+            return
+        dec = trace.pop("decode", None)
+        if dec is not None:
+            tr.end(dec, tokens=len(req.output),
+                   **({"stop": reason} if reason else {}))
+        root = trace.get("root")
+        if root is not None and reason:
+            tr.event(reason, root)
+
     # ------------------------------------------------------------ public ----
     def submit(self, req: Request):
         # generation past the cache boundary truncates in _maybe_finish,
         # which also guarantees a preemption victim's resume prefill
         # (prompt + partial output) still fits the cache
         assert len(req.prompt) < self.cache_len, "prompt exceeds cache"
+        tr = self.tracer
+        if tr is not None:
+            req._t_submit = tr.clock()
+            root = tr.begin(
+                f"request {req.rid}", cat="request",
+                track=(f"serving:{req.tenant}", f"req {req.rid}"),
+                rid=req.rid, tenant=req.tenant, qos=req.qos,
+                prompt_tokens=len(req.prompt),
+                max_new_tokens=req.max_new_tokens)
+            req._trace = {"root": root}
+            tr.event("SUBMIT", root)
         if self.paging is not None:
             # worst-case page footprint, for GrpTRES kv_pages caps
             req._est_pages = pages_for(
@@ -466,6 +512,15 @@ class DecodeEngine:
         the suffix allocates/prefills, and the request's complete prompt
         pages join the radix index afterwards."""
         toks = self._resume_tokens(req)
+        tr = self.tracer
+        root = self._trace_root(req)
+        resume = bool(req.output)
+        psp = None
+        if tr is not None:
+            if root is not None:
+                tr.event("ADMIT", root, slot=slot)
+            psp = tr.begin("PREFILL", cat="prefill", parent=root,
+                           tokens=len(toks), resume=resume)
         pages = shared = None
         if self.paging is not None:
             ps = self.paging.page_size
@@ -490,6 +545,8 @@ class DecodeEngine:
                 # still can't hold the prefill: back to the queue
                 if shared:
                     self.allocator.free(shared)      # unpin the match
+                if psp is not None:
+                    tr.end(psp, aborted=True)
                 self.admission.release(req)
                 self.admission.requeue(req)
                 return
@@ -509,10 +566,7 @@ class DecodeEngine:
                     self.metrics.counter(
                         METRIC_SERVE_PREFIX_MISSES,
                         "admissions with no cached prefix").inc()
-        with_timer = self.metrics.histogram(
-            "serve_prefill_seconds", "prefill latency")
-        t0 = time.perf_counter()
-        try:
+        with self.metrics.timer("serve_prefill_seconds", "prefill latency"):
             if shared:
                 # prefix hit: prefill ONLY the suffix, attending to the
                 # shared pages through a prefix-only page-table row.  The
@@ -555,8 +609,6 @@ class DecodeEngine:
             # very next consumer (argmax below) would absorb the device
             # wait — serve_prefill_seconds must report real latency
             jax.block_until_ready(logits)
-        finally:
-            with_timer.observe(time.perf_counter() - t0)
         if self.paging is not None:
             # scatter the prefilled lines into the privately-owned pages
             # (suffix-only on a prefix hit — shared pages are READ-ONLY
@@ -607,6 +659,28 @@ class DecodeEngine:
         self.metrics.counter(
             METRIC_SERVE_TENANT_ADMITTED,
             "admissions per tenant").inc(tenant=req.tenant)
+        if tr is not None:
+            now = tr.clock()
+            attrs = {"bucket": int(L)}
+            if self.paging is not None:
+                n_sh = len(shared) if shared else 0
+                attrs.update(prefix_pages=n_sh,
+                             pages_allocated=len(priv))
+            tr.end(psp, ts=now, **attrs)
+            if resume:
+                if root is not None:
+                    tr.event("RESUME", root, slot=slot)
+            else:
+                # the first output token comes from the prefill argmax,
+                # so TTFT = admit -> end of the prefill sync (resumes
+                # already produced their first token pre-eviction)
+                if root is not None:
+                    tr.event("first_token", root)
+                if req._t_admit is not None:
+                    tr.slo.ttft(now - req._t_admit, req.tenant, req.qos)
+            req._t_last = now
+            req._trace["decode"] = tr.begin(
+                "DECODE", cat="decode", parent=root, slot=slot)
         self._maybe_finish(slot)
 
     def _billed_pages(self, slot: int) -> float:
@@ -658,6 +732,7 @@ class DecodeEngine:
         """Evict a running request from its slot; it requeues at the head
         of its QOS class in its tenant queue with partial output retained."""
         victim.preemptions += 1
+        self._trace_decode_end(victim, "PREEMPT")
         slot = self._vacate(victim)
         self.metrics.counter(
             METRIC_SERVE_PREEMPTIONS, "evicted decode slots").inc()
@@ -671,6 +746,16 @@ class DecodeEngine:
         self._release_pages(slot, req)
         self.admission.release(req)
         self.metrics.counter("serve_requests_completed").inc()
+        tr = self.tracer
+        if tr is not None:
+            self._trace_decode_end(req)
+            trace = getattr(req, "_trace", None)
+            root = trace.pop("root", None) if trace else None
+            if root is not None:
+                tr.event("FINISH", root)
+                tr.end(root, tokens=len(req.output))
+            if req._t_submit is not None:
+                tr.slo.e2e(tr.clock() - req._t_submit, req.tenant, req.qos)
 
     def _maybe_finish(self, slot: int):
         req = self.slots[slot]
@@ -722,6 +807,7 @@ class DecodeEngine:
         """A slot the pool starved out goes back to its tenant queue with
         partial output retained (resume-exact, like a preemption victim);
         page-budget admission re-admits it once pages free up."""
+        self._trace_decode_end(self.slots[slot], "STARVED")
         self._vacate(self.slots[slot])
         self.metrics.counter(
             "serve_page_starvations",
@@ -805,6 +891,10 @@ class DecodeEngine:
         temps = np.array([
             (self.slots[i].temperature if self.slots[i] else 0.0)
             for i in range(self.num_slots)], np.float32)
+        tr = self.tracer
+        csp = tr.begin("decode_chunk", cat="engine",
+                       track=("serving:engine", "dispatch"),
+                       active=len(active)) if tr is not None else None
         t0 = time.perf_counter()
         if self.paging is not None:
             limit = np.array([
@@ -836,6 +926,7 @@ class DecodeEngine:
         self.metrics.histogram("serve_decode_seconds",
                                "batched decode-step latency").observe(
             time.perf_counter() - t0)
+        ts_sync = tr.clock() if tr is not None else 0.0
         charges = []
         tenant_tokens: dict[str, int] = {}
         total = 0
@@ -861,6 +952,13 @@ class DecodeEngine:
                 tenant_tokens[req.tenant] = \
                     tenant_tokens.get(req.tenant, 0) + n_gen
                 total += n_gen
+                if tr is not None and req._t_last is not None:
+                    # one host sync per chunk: spread the chunk's wall
+                    # time evenly across its tokens (token-weighted)
+                    tr.slo.itl((ts_sync - req._t_last) / n_gen,
+                               req.tenant, req.qos, n=n_gen)
+            if tr is not None:
+                req._t_last = ts_sync
             self.pos[i] = pos[i]
             self.last_tok[i] = token[i]
             self.remaining[i] = remaining[i]
@@ -875,6 +973,8 @@ class DecodeEngine:
                     self._requeue_starved(i)
                 else:
                     self._finish(i)
+        if csp is not None:
+            tr.end(csp, ts=ts_sync, tokens=total)
         self.admission.charge_bulk(charges)
         self.metrics.counter("serve_tokens_generated").inc(total)
         tok_counter = self.metrics.counter(
@@ -898,10 +998,16 @@ class DecodeEngine:
                                "batched decode-step latency").observe(
             time.perf_counter() - t0)
         nxt = self._sample(logits)
+        tr = self.tracer
+        ts_sync = tr.clock() if tr is not None else 0.0
         tenant_tokens: dict[str, int] = {}
         for i in active:
             req = self.slots[i]
             req.output.append(int(nxt[i]))
+            if tr is not None:
+                if req._t_last is not None:
+                    tr.slo.itl(ts_sync - req._t_last, req.tenant, req.qos)
+                req._t_last = ts_sync
             self.pos[i] += 1
             self.last_tok[i] = nxt[i]
             self.remaining[i] -= 1
