@@ -257,6 +257,91 @@ def bench_latency_slo(results: list):
     assert traced_tps >= 0.95 * base_tps, (base_tps, traced_tps)
 
 
+def bench_chunked_prefill_ttft(results: list):
+    """The continuous-batching headline claim: under a bursty two-tenant
+    mixed-length workload, token-budgeted serving (``max_batch_tokens``)
+    improves short-request p99 TTFT >= 2x over classic paged serving —
+    a long prompt's whole-prompt prefill no longer head-of-line blocks
+    the wave's short prompts, because the budgeted engine admits it as a
+    partial and packs its prefill chunk-by-chunk AFTER the shorts —
+    while aggregate throughput stays within 10% and greedy outputs stay
+    bit-identical.  The long prompt (700 tokens, 1024 cache) sits just
+    past half its power-of-two prefill bucket, so classic serving also
+    pays ~1.5x padding compute per prefill that the chunked path — which
+    only ever computes real tokens — never does."""
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    cache_len, page = 1024, 16
+    waves, shorts_per_wave = 4, 3
+
+    def make_wave(w, rng):
+        # the long submits FIRST so classic admission picks it first
+        # (arrival order breaks the fair-share tie) and its whole-prompt
+        # prefill blocks the wave's shorts — the HOL scenario
+        reqs = [Request(rid=w * 10,
+                        prompt=rng.integers(
+                            2, cfg.vocab_size, 700).astype(np.int32),
+                        max_new_tokens=4, tenant="batch")]
+        for i in range(shorts_per_wave):
+            reqs.append(Request(
+                rid=w * 10 + 1 + i,
+                prompt=rng.integers(2, cfg.vocab_size,
+                                    8 + 2 * i).astype(np.int32),
+                max_new_tokens=64, tenant="interactive"))
+        return reqs
+
+    def serve(max_batch_tokens):
+        from repro.serving import AdmissionController
+        admission = AdmissionController()
+        admission.add_tenant("interactive", shares=4)
+        admission.add_tenant("batch", shares=1)
+        eng = DecodeEngine(cfg, params, num_slots=1 + shorts_per_wave,
+                           cache_len=cache_len, decode_chunk=8,
+                           prefill_buckets="auto", kv_page_size=page,
+                           admission=admission,
+                           max_batch_tokens=max_batch_tokens)
+        rng = np.random.default_rng(11)
+        for r in make_wave(9, rng):      # warm-up wave: absorb compiles
+            eng.submit(r)
+        eng.run_to_completion()
+        warm = int(eng.metrics.counter("serve_tokens_generated").value())
+        ttfts, outputs = [], {}
+        t0 = time.perf_counter()
+        for w in range(waves):
+            wave = make_wave(w, rng)
+            t_submit = time.perf_counter()
+            for r in wave:
+                eng.submit(r)
+            pending = {r.rid: r for r in wave if r.tenant == "interactive"}
+            while eng.step() > 0:
+                now = time.perf_counter()
+                for rid in [i for i, r in pending.items() if r.output]:
+                    ttfts.append(now - t_submit)
+                    del pending[rid]
+            outputs.update((r.rid, list(r.output)) for r in wave)
+        dt = time.perf_counter() - t0
+        toks = int(
+            eng.metrics.counter("serve_tokens_generated").value()) - warm
+        return np.asarray(sorted(ttfts)), toks / dt, outputs
+
+    ttft_base, tps_base, out_base = serve(None)
+    ttft_chunk, tps_chunk, out_chunk = serve(128)
+    p99_base = float(np.quantile(ttft_base, 0.99))
+    p99_chunk = float(np.quantile(ttft_chunk, 0.99))
+    speedup = p99_base / p99_chunk
+    results.append((
+        "serving_chunked_prefill", p99_chunk * 1e6,
+        f"short-request p99 TTFT {speedup:.1f}x better with chunked "
+        f"prefill ({p99_base * 1e3:.0f} -> {p99_chunk * 1e3:.0f} ms), "
+        f"{tps_chunk:,.0f} vs {tps_base:,.0f} tok/s",
+        {"ttft_p99_ms_budgeted": round(p99_chunk * 1e3, 3),
+         "ttft_p99_ms_classic": round(p99_base * 1e3, 3)}))
+    # greedy decode must not notice the chunking — bit-identical outputs
+    assert out_chunk == out_base, "chunked prefill changed greedy output"
+    assert speedup >= 2.0, (p99_base, p99_chunk)
+    assert tps_chunk >= 0.9 * tps_base, (tps_base, tps_chunk)
+
+
 def bench_prefill_latency(results: list):
     import jax.numpy as jnp
     from repro.configs import RunConfig
@@ -287,4 +372,5 @@ def run(results: list):
     bench_paged_capacity(results)
     bench_prefix_reuse(results)
     bench_latency_slo(results)
+    bench_chunked_prefill_ttft(results)
     bench_prefill_latency(results)

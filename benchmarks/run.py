@@ -134,7 +134,15 @@ def compare_against(results, baseline_path: str,
         check(name, old, us)
         pct = rest[0] if rest else {}
         old_pct = base_pct.get(name, {})
-        for key in sorted(set(pct) & set(old_pct)):
+        shared = set(pct) & set(old_pct)
+        if (pct or old_pct) and not shared:
+            # a renamed/retyped percentile key silently un-gates the
+            # benchmark — name both sides so the drift is visible
+            print(f"[compare] WARNING {name}: no shared percentile keys "
+                  f"— percentile gate skipped (current: "
+                  f"{sorted(pct) or '-'}, baseline: "
+                  f"{sorted(old_pct) or '-'})", file=sys.stderr)
+        for key in sorted(shared):
             check(f"{name}.{key}", old_pct[key], pct[key])
     missing = sorted(set(base) - {row[0] for row in results})
     for name in missing:

@@ -327,12 +327,14 @@ def sshare(cluster: Cluster, tres: bool = False) -> str:
 
 
 def sdiag(cluster: Optional[Cluster] = None, tracer=None,
-          admission=None) -> str:
+          admission=None, engine=None) -> str:
     """``sdiag``-style diagnostics: scheduler cycle statistics (from the
     cluster controller), admission-controller cycle statistics (from the
-    serving layer), and per-tenant serving SLO percentiles (from the
-    tracer's derived histograms).  Any subset of sources may be given;
-    sections for absent sources are simply omitted."""
+    serving layer), per-tenant serving SLO percentiles (from the
+    tracer's derived histograms), and serve-step utilization (from a
+    budgeted DecodeEngine's per-iteration counters).  Any subset of
+    sources may be given; sections for absent sources are simply
+    omitted."""
     sections = []
     if cluster is not None:
         st = cluster.sched_stats
@@ -357,6 +359,24 @@ def sdiag(cluster: Optional[Cluster] = None, tracer=None,
             f"\tPreemptive picks: {st['preempt_picks']}",
             f"\tRequeues:         {st['requeues']}",
             f"\tQueued now:       {admission.pending()}",
+        ]))
+    if engine is not None and getattr(engine, "max_batch_tokens",
+                                      None) is not None:
+        st = engine.serve_stats
+        it, T = st["iterations"], engine.max_batch_tokens
+        spent = st["decode_tokens"] + st["prefill_tokens"]
+        cap = it * T
+        fill = spent / cap if cap else 0.0
+        d_pct = st["decode_tokens"] / spent if spent else 0.0
+        p_pct = st["prefill_tokens"] / spent if spent else 0.0
+        sections.append("\n".join([
+            "Serve-step utilization (token budget):",
+            f"\tIterations:       {it}",
+            f"\tToken budget:     {T}/step",
+            f"\tBudget fill:      {spent}/{cap} ({fill:.0%})",
+            f"\tDecode tokens:    {st['decode_tokens']} ({d_pct:.0%})",
+            f"\tPrefill tokens:   {st['prefill_tokens']} ({p_pct:.0%}, "
+            f"{st['prefill_chunks']} chunks)",
         ]))
     if tracer is not None:
         sections.append("Serving SLO (per tenant/QOS):\n"

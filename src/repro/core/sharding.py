@@ -138,17 +138,19 @@ def batch_shardings(cfg: ModelConfig, mesh: Mesh, run: RunConfig,
 
 
 def cache_shardings(cfg: ModelConfig, mesh: Mesh, run: RunConfig,
-                    cache_abstract) -> dict:
+                    cache_abstract, paging: bool = False) -> dict:
     """Shardings for the decode cache pytree.
 
     batch -> (pod, data) when divisible; kv_heads/ssm_head -> model when
     divisible, else the cache sequence dim -> model (sequence-sharded KV —
-    GSPMD inserts the softmax-combine collectives).
+    GSPMD inserts the softmax-combine collectives).  ``paging=True``
+    matches a paged-pool cache (no batch dim: pages replace (batch, seq),
+    so the batch rule never lands on the page axis).
     """
     from repro.models.model import cache_logical_axes
     strategy = get_strategy(run.strategy)
     model_n = _axis_size(mesh, "model")
-    axes_tree = cache_logical_axes(cfg)
+    axes_tree = cache_logical_axes(cfg, paging=paging)
 
     def leaf_spec(arr, axes):
         spec: list = [None] * len(arr.shape)

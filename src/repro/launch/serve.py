@@ -35,6 +35,18 @@ def resolve_prefix_paging(prefix_cache: bool, kv_paging: int) -> int:
     return kv_paging
 
 
+def resolve_chunked_paging(max_batch_tokens, kv_paging: int) -> int:
+    """--max-batch-tokens implies --kv-paging: a partial prefill holds
+    exactly ceil(pos_filled/page) pages, which the dense per-slot cache
+    cannot express — so budgeted mode defaults the page size in (and
+    says so) when paging wasn't requested explicitly."""
+    if max_batch_tokens is not None and not kv_paging:
+        print(f"[serve] --max-batch-tokens implies --kv-paging: using "
+              f"{DEFAULT_PREFIX_PAGE_SIZE}-line pages")
+        return DEFAULT_PREFIX_PAGE_SIZE
+    return kv_paging
+
+
 def parse_tenants(spec: str, shares: str = "") -> dict[str, int]:
     """``alice:8,bob:1`` (or ``--tenants alice,bob --shares 8,1``) ->
     {"alice": 8, "bob": 1}."""
@@ -115,6 +127,14 @@ def main(argv=None) -> int:
                          "prefix map the same KV pages copy-on-write and "
                          "prefill only their suffix (implies --kv-paging "
                          f"{DEFAULT_PREFIX_PAGE_SIZE})")
+    ap.add_argument("--max-batch-tokens", type=int, nargs="?", const=512,
+                    default=None, metavar="T",
+                    help="continuous batching: each iteration runs ONE "
+                         "fused step over a T-token budget mixing decode "
+                         "lanes and prefill chunks, so long prompts stop "
+                         "head-of-line blocking short ones (bare flag: "
+                         "T=512; implies --kv-paging "
+                         f"{DEFAULT_PREFIX_PAGE_SIZE})")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                          "synthetic request (exercises --prefix-cache)")
@@ -156,6 +176,7 @@ def main(argv=None) -> int:
         admission.add_tenant(name, shares=share)
     use_pallas = resolve_use_pallas(args.use_pallas, jax.default_backend())
     kv_paging = resolve_prefix_paging(args.prefix_cache, args.kv_paging)
+    kv_paging = resolve_chunked_paging(args.max_batch_tokens, kv_paging)
     engine = DecodeEngine(cfg, params, num_slots=args.slots,
                           cache_len=args.cache_len, metrics=metrics,
                           admission=admission,
@@ -166,6 +187,7 @@ def main(argv=None) -> int:
                           kv_page_size=kv_paging,
                           kv_pages=args.kv_pages,
                           prefix_cache=args.prefix_cache,
+                          max_batch_tokens=args.max_batch_tokens,
                           tracer=tracer)
     rng = np.random.default_rng(args.seed)
     names = list(tenants)
@@ -212,6 +234,15 @@ def main(argv=None) -> int:
               f"(high-water {engine.allocator.high_water}, "
               f"{int(metrics.counter('serve_page_starvations').value())} "
               f"starvation requeues)")
+    if engine.max_batch_tokens is not None:
+        st = engine.serve_stats
+        spent = st["decode_tokens"] + st["prefill_tokens"]
+        cap = st["iterations"] * engine.max_batch_tokens
+        print(f"continuous batching: budget {engine.max_batch_tokens} "
+              f"tok/step, {st['iterations']} iterations, "
+              f"fill {spent}/{cap} ({spent / cap if cap else 0:.0%}), "
+              f"{st['prefill_chunks']} prefill chunks "
+              f"({engine.chunk_compilations()} chunk compilations)")
     if engine.prefix is not None:
         hits = int(metrics.counter(METRIC_SERVE_PREFIX_HITS).value())
         misses = int(metrics.counter(METRIC_SERVE_PREFIX_MISSES).value())
@@ -238,7 +269,7 @@ def main(argv=None) -> int:
         from repro.cluster.commands import sdiag
         print(f"trace: {len(data['traceEvents'])} events -> {args.trace} "
               f"(load in ui.perfetto.dev)")
-        print(sdiag(admission=admission, tracer=tracer))
+        print(sdiag(admission=admission, tracer=tracer, engine=engine))
     return 0
 
 

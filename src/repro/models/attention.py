@@ -72,16 +72,21 @@ def out_proj(p: dict, o: jax.Array) -> jax.Array:
 
 # ------------------------------------------------- blockwise causal core ----
 
-def _attend_block(q, k, v, q_pos, kv_pos, window, scale):
+def _attend_block(q, k, v, q_pos, kv_pos, window, scale, kv_valid=None):
     """q: (B,qb,K,G,Dh)  k/v: (B,S,K,Dh)  -> (B,qb,K,G,Dh).
 
     Computes softmax over the full kv range with causal (+ window) masking.
-    fp32 logits/softmax for stability.
+    fp32 logits/softmax for stability.  ``kv_valid`` ((S,) bool) excludes
+    pad kv lines entirely (front-padded prefill); a query whose kv range
+    masks out completely stays NaN-free because ``_NEG_INF`` is finite —
+    its softmax is uniform and its (garbage) output is never consumed.
     """
     logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
     mask = kv_pos[None, :] <= q_pos[:, None]                 # causal
     if window is not None:
         mask &= (q_pos[:, None] - kv_pos[None, :]) < window  # sliding window
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
     logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
@@ -89,6 +94,7 @@ def _attend_block(q, k, v, q_pos, kv_pos, window, scale):
 
 def causal_attention(q, k, v, cfg: ModelConfig, q_block: int = 512,
                      positions: Optional[jax.Array] = None,
+                     kv_valid: Optional[jax.Array] = None,
                      unroll: bool = False, one_block: bool = False):
     """q: (B,S,H,Dh), k/v: (B,S,K,Dh) -> (B,S,H,Dh).  Full/sliding causal.
 
@@ -101,6 +107,12 @@ def causal_attention(q, k, v, cfg: ModelConfig, q_block: int = 512,
     logit all-gathers to reshard — measured, see EXPERIMENTS.md §Perf-1);
     with one block the S shards flow through scores -> probs -> output
     untouched.  The (S_shard, S) logits transient is remat-bounded.
+
+    ``kv_valid`` ((S,) bool, optional) excludes pad kv lines for every
+    query (front-padded bucketed prefill, where ``positions`` carries the
+    shifted coordinates).  It forces the one-block path: the q-block scan
+    derives each block's q positions from ``start + arange``, which only
+    holds for the identity position map.
     """
     B, S, H, Dh = q.shape
     K = k.shape[2]
@@ -110,8 +122,9 @@ def causal_attention(q, k, v, cfg: ModelConfig, q_block: int = 512,
     qg = q.reshape(B, S, K, G, Dh)
     kv_pos = jnp.arange(S) if positions is None else positions
 
-    if one_block or S <= q_block:
-        o = _attend_block(qg, k, v, kv_pos, kv_pos, window, scale)
+    if one_block or S <= q_block or kv_valid is not None:
+        o = _attend_block(qg, k, v, kv_pos, kv_pos, window, scale,
+                          kv_valid=kv_valid)
         return o.reshape(B, S, H, Dh)
 
     nb = S // q_block
@@ -198,30 +211,54 @@ def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, n_groups: int,
 
 def attention_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
                       cache_slots: int, use_pallas: bool = False,
-                      unroll: bool = False):
+                      unroll: bool = False,
+                      positions: Optional[jax.Array] = None,
+                      valid: Optional[jax.Array] = None,
+                      roll: Optional[jax.Array] = None):
     """Prefill: full attention + return the populated KV cache slice.
 
     Returns (out (B,S,d), {"k","v"} (B, slots, K, Dh)).  When
     ``cache_slots < S`` (sliding window) the last ``slots`` positions are
     kept, laid out at ring indices ``pos % slots``.
+
+    ``positions``/``valid``/``roll`` support front-padded bucketed
+    prefill (hybrid/SSM configs whose siblings need the real tokens
+    chunk-aligned): ``positions`` ((S,) int32, may be negative at the
+    front pad) replaces ``arange(S)`` for RoPE and the causal mask,
+    ``valid`` ((S,) bool) masks pad kv out of every query, and ``roll``
+    (traced int32, the front-pad width) rotates the returned KV slice so
+    real tokens land at cache lines ``[0, num_real)`` — exactly where an
+    unpadded prefill writes them.  Garbage lines at/past ``num_real``
+    stay masked at decode until overwritten, same as the tail-pad path.
     """
     B, S, _ = x.shape
     q, k, v = qkv_proj(p, x, cfg)
     if cfg.pos_embedding == "rope":
-        pos = jnp.arange(S)
+        pos = jnp.arange(S) if positions is None else positions
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
-    if use_pallas:
+    if valid is not None:
+        assert not use_pallas, \
+            "front-padded prefill has no Pallas path (flash kernel " \
+            "lacks a kv-validity mask)"
+        o = causal_attention(q, k, v, cfg, positions=positions,
+                             kv_valid=valid)
+    elif use_pallas:
         from repro.kernels import ops as kops
         o = kops.flash_attention(q, k, v, window=cfg.sliding_window)
     else:
         o = causal_attention(q, k, v, cfg)
     o = constrain(o, "heads")
     if cache_slots >= S:
+        if roll is not None:
+            k = jnp.roll(k, -roll, axis=1)
+            v = jnp.roll(v, -roll, axis=1)
         pad = cache_slots - S
         ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     else:
+        assert roll is None, \
+            "front-padded prefill is gated off sliding-window ring caches"
         # last `slots` positions, placed at ring index pos % slots
         tail_k = k[:, S - cache_slots:]
         tail_v = v[:, S - cache_slots:]
@@ -240,10 +277,14 @@ def attention_prefill_paged(p: dict, x: jax.Array, cache: dict,
     x: (B, S, d) hidden states of the *suffix* tokens, at absolute
     positions ``start + [0, S)``; cache k/v: (num_pages, page_size, K,
     Dh) — the shared pool; page_table: (B, n_prefix_pages) int32 rows
-    whose first ``start // page_size`` entries are the request's
+    whose first ``ceil(start / page_size)`` entries are the request's
     READ-ONLY shared prefix pages (any remaining entries null — callers
     may bucket the row width to the match depth so cost scales with the
-    actual prefix); start: scalar int32 prefix length, page-aligned.
+    actual prefix); start: scalar int32 prefix length.  ``start`` need
+    NOT be page-aligned: the prefix mask below works at LINE granularity
+    (``arange(L) < start``), so a partially-filled last page contributes
+    exactly its live lines — this is what lets chunked prefill
+    (``models.model.prefill_chunk``) resume from any position.
 
     Suffix queries attend causally over [the prefix gathered through the
     page table (positions < start), the suffix itself].  The masking and

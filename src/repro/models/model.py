@@ -216,7 +216,9 @@ def cache_logical_axes(cfg: ModelConfig, paging: bool = False):
 
 def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,
             cache_len: Optional[int] = None,
-            last_pos: Optional[jax.Array] = None):
+            last_pos: Optional[jax.Array] = None,
+            front_pad: Optional[jax.Array] = None,
+            num_real: Optional[jax.Array] = None):
     """Run the full prompt, return (last-position logits, populated cache).
 
     ``last_pos`` (traced scalar int32, optional) selects which position's
@@ -225,6 +227,20 @@ def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,
     causal masking guarantees positions < P never attend the pad tail, so
     the logits at P-1 are exactly the unpadded prompt's (the pad KV lines
     written past P-1 stay masked at decode time until overwritten).
+
+    ``front_pad``/``num_real`` (traced int32, optional, both or neither)
+    switch to FRONT-padded bucketing for SSM/hybrid configs, whose state
+    scan cannot ride the causal-mask-only tail-pad argument: the real
+    tokens sit at ``[front_pad, front_pad + num_real)``, pad positions
+    are explicitly masked out of attention kv and of the SSD recurrence
+    (``dt=0`` identity steps), RoPE/causal positions shift to
+    ``arange(S) - front_pad``, and attention KV lines rotate back so
+    real tokens land at cache lines ``[0, num_real)``.  Callers align
+    ``front_pad`` to a multiple of ``cfg.ssm.chunk`` so the real tokens'
+    chunk offsets — and the f32 scan — match the unpadded run bit for
+    bit.  Pass ``last_pos = front_pad + num_real - 1``.  Requires
+    ``cfg.pos_embedding != "sinusoidal"`` (that PE is added before the
+    shift is known) and no sliding-window ring.
     """
     P = group_period(cfg)
     sched = layer_schedule(cfg)[:P]
@@ -232,6 +248,15 @@ def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,
     S = h.shape[1]
     cache_len = cache_len or S
     slots = min(cache_len, cfg.sliding_window or cache_len)
+    positions = valid = None
+    if front_pad is not None:
+        assert num_real is not None
+        assert cfg.pos_embedding != "sinusoidal", \
+            "front-padded prefill: sinusoidal PE is applied in " \
+            "build_hidden, before the position shift"
+        idx = jnp.arange(S)
+        valid = (idx >= front_pad) & (idx < front_pad + num_real)
+        positions = idx - front_pad
 
     def group_body(x, group_params):
         new_caches = []
@@ -241,10 +266,15 @@ def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,
             if mixer == "attn":
                 hh, c = A.attention_prefill(p["attn"], hh, cfg, slots,
                                             use_pallas=run.use_pallas,
-                                            unroll=run.unroll)
+                                            unroll=run.unroll,
+                                            positions=positions,
+                                            valid=valid, roll=front_pad)
             else:
-                hh, c = SSM.ssm_prefill(p["ssm"], hh, cfg,
-                                        use_pallas=run.use_pallas)
+                hh, c = SSM.ssm_prefill(
+                    p["ssm"], hh, cfg, use_pallas=run.use_pallas,
+                    valid=valid,
+                    conv_end=(None if front_pad is None
+                              else front_pad + num_real))
             x = constrain(x + hh, "hidden")
             ffn = sched[i][1]
             if ffn != "none":
@@ -287,10 +317,12 @@ def prefill_suffix(params, batch: dict, cache, page_table, start,
     ``batch["tokens"]``: (B, S) the *suffix* tokens, at absolute
     positions ``start + [0, S)``; ``cache``: the paged pool pytree
     (read-only here); ``page_table``: (B, n_prefix_pages) rows whose
-    first ``start // page_size`` entries are the request's shared prefix
-    pages; ``start``: scalar int32 prefix length (page-aligned);
-    ``last_pos``: like :func:`prefill` — bucketed suffixes pass the true
-    last *local* index.
+    first ``ceil(start / page_size)`` entries are the request's prefix
+    pages; ``start``: scalar int32 prefix length — page-aligned on the
+    prefix-cache path, but ANY position works (the prefix mask is
+    line-granular; see :func:`prefill_chunk`); ``last_pos``: like
+    :func:`prefill` — bucketed suffixes pass the true last *local*
+    index.
 
     Returns (logits (B,1,V), {"layers": [...]} suffix cache slices, each
     (G, B, S, K, Dh)) — the caller scatters the slices into its
@@ -347,6 +379,44 @@ def prefill_suffix(params, batch: dict, cache, page_table, start,
     else:
         h_last = jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
     return unembed(params, h_last, cfg), {"layers": list(caches)}
+
+
+def prefill_chunk(params, batch: dict, cache, page_table, start,
+                  cfg: ModelConfig, run: RunConfig,
+                  last_pos: Optional[jax.Array] = None):
+    """One chunk of a chunked (continuous-batching) prefill.
+
+    Chunked prefill IS suffix prefill applied repeatedly: chunk ``i``
+    treats the ``start = pos_filled`` tokens already written to the
+    request's pages as the "prefix" and its own ``S`` tokens as the
+    "suffix", so this is :func:`prefill_suffix` with two relaxations the
+    underlying attention already supports:
+
+    * ``start`` is NOT page-aligned in general — a chunk boundary can
+      land mid-page.  ``attention_prefill_paged`` masks the gathered
+      prefix at line granularity (``arange(L) < start``), so the
+      partially-filled last page contributes exactly its live lines.
+      Only the caller's KV *scatter* needs mid-page placement (the
+      engine's per-line chunk insert).
+    * ``page_table`` rows cover the pages holding ``[0, start + S)`` —
+      the engine grows the request's holdings to ceil((start+S)/page)
+      pages before dispatching the chunk.
+
+    Chunks pad to a small fixed bucket set (powers of two up to the
+    token budget), so the serving step compiles O(chunk buckets) times;
+    ``last_pos`` selects the last REAL token's logits, and the final
+    chunk's logits seed decode exactly like a whole-prompt prefill's.
+    Greedy decode after N chunks is bit-identical to one whole-prompt
+    prefill: every chunk runs the same masked attention math over the
+    same absolute positions, and the f32-partial-sum combine in
+    ``attention_prefill_paged`` avoids the double-rounding a bf16
+    prefix/suffix split would introduce.
+
+    Returns (logits (B,1,V), {"layers": [...]} chunk KV slices, each
+    (G, B, S, K, Dh)).
+    """
+    return prefill_suffix(params, batch, cache, page_table, start, cfg,
+                          run, last_pos=last_pos)
 
 
 # ----------------------------------------------------------------- decode ----

@@ -187,17 +187,39 @@ def init_ssm_cache(cfg: ModelConfig, batch: int, n_groups: int,
 
 
 def ssm_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
-                use_pallas: bool = False):
-    """Full-sequence forward that also returns the decode cache."""
+                use_pallas: bool = False, valid=None, conv_end=None):
+    """Full-sequence forward that also returns the decode cache.
+
+    ``valid`` ((S,) bool, optional) marks pad positions in a two-sided
+    padded prompt (front-padded bucketed prefill).  Pads cannot ride the
+    tail-pad identity alone: ``dt = softplus(dt_raw + dt_bias)`` is
+    nonzero even for zero input, so pad positions are explicitly masked
+    at the two recurrence inputs — the conv input ``u`` (pads contribute
+    exactly the zeros the unpadded run's conv init-state provides) and
+    ``dt`` (``dt=0`` makes a pad an identity step for the SSD scan, the
+    same trick :func:`ssd_chunked` uses for its internal tail pad).  The
+    caller aligns the front pad to a chunk boundary so the real tokens'
+    chunk offsets — and therefore the f32 scan math — match the unpadded
+    run bit for bit.
+
+    ``conv_end`` (traced int32, optional: ``front_pad + num_real``) ends
+    the conv-state window at the last REAL token instead of the padded
+    tail, so decode resumes from the exact state the unpadded prefill
+    would have left.
+    """
     B, S, _ = x.shape
     ssm = cfg.ssm
     H, P = ssm.num_heads(cfg.d_model), ssm.head_dim
     z, u, dt_raw = _proj_split(p, x, cfg)
+    if valid is not None:
+        u = u * valid[None, :, None].astype(u.dtype)
     u_conv, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"])
     u_conv = jax.nn.silu(u_conv)
     xin, Bm, Cm = _post_conv_split(u_conv, cfg)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
                          p["dt_bias"].astype(jnp.float32))
+    if valid is not None:
+        dt = dt * valid[None, :, None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     xh = xin.reshape(B, S, H, P)
     y, state = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk)
@@ -205,6 +227,15 @@ def ssm_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
     y = y.reshape(B, S, H * P)
     y = _rmsnorm_gated(y, z, p["norm_scale"], cfg.norm_eps)
     out = y @ p["wo"].astype(y.dtype)
+    if conv_end is not None:
+        # window of W-1 inputs ending at the last real token; when the
+        # prompt is shorter than the window this slides into the masked
+        # front pad, whose zeros match the unpadded run's zero init-state
+        W = p["conv_w"].shape[0]
+        up = jnp.concatenate(
+            [jnp.zeros((B, W - 1, u.shape[-1]), u.dtype), u], axis=1)
+        conv_state = jax.lax.dynamic_slice_in_dim(up, conv_end, W - 1,
+                                                  axis=1)
     # conv state: last (W-1) *pre-activation* conv inputs
     return out, {"state": state, "conv": conv_state.astype(jnp.dtype(cfg.dtype))}
 

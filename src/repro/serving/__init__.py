@@ -4,11 +4,14 @@ from repro.serving.admission import (
 from repro.serving.engine import DecodeEngine, Request
 from repro.serving.prefix import PrefixCache, RadixNode
 from repro.serving.serve_step import (
-    fused_serve_step_lowering_args, make_fused_serve_step, make_serve_step,
+    chunked_serve_step_lowering_args, fused_serve_step_lowering_args,
+    make_chunked_serve_step, make_fused_serve_step, make_serve_step,
     serve_step_lowering_args,
 )
 
 __all__ = ["AdmissionController", "DecodeEngine", "PrefixCache",
            "RadixNode", "Request", "SERVING_TRES_WEIGHTS", "Tenant",
-           "fused_serve_step_lowering_args", "make_fused_serve_step",
-           "make_serve_step", "serve_step_lowering_args"]
+           "chunked_serve_step_lowering_args",
+           "fused_serve_step_lowering_args", "make_chunked_serve_step",
+           "make_fused_serve_step", "make_serve_step",
+           "serve_step_lowering_args"]

@@ -283,10 +283,15 @@ class AdmissionController:
 
     def adjust_pages(self, req, delta: int):
         """Track a tenant's reserved KV pages for the ``kv_pages``
-        GrpTRES cap.  The paged engine reserves a request's WORST-CASE
-        footprint (``_est_pages``) for its whole slot residency and
-        returns it on finish/evict — decode-time growth is pre-paid, so
-        a tenant can never grow past its cap."""
+        GrpTRES cap.  The classic paged engine reserves a request's
+        WORST-CASE footprint (``_est_pages``) for its whole slot
+        residency and returns it on finish/evict — decode-time growth is
+        pre-paid, so a tenant can never grow past its cap.  The budgeted
+        engine (``max_batch_tokens``) instead moves the hold
+        chunk-by-chunk as a partial prefill's pages actually materialize
+        (TRUE holdings, returned in full on promotion-exit, preemption,
+        or starvation), so mid-prefill requests occupy exactly what they
+        use."""
         t = self.tenants.get(req.tenant)
         if t is not None:
             t.pages_by_qos[req.qos] = max(

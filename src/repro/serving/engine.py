@@ -60,6 +60,29 @@ free pool *before* the scavenger victim path fires.  Shared pages bill
 ``gres/kv_page`` residency once, amortized across current holders, so
 ``sshare --tres`` keeps reporting true HBM use, and greedy decode stays
 bit-identical to the no-reuse path.
+
+**Continuous batching with chunked prefill** (``max_batch_tokens``,
+needs paging + fused): instead of running a whole prompt's prefill as
+one blocking dispatch at admission — head-of-line blocking every
+decoding slot for the duration — each engine iteration runs ONE fused
+step over a token budget that mixes decode lanes (1 token each while
+prefills are pending) and prefill *chunks* from a partial-prefill
+queue.  Chunked prefill is suffix prefill applied repeatedly
+(``models.model.prefill_chunk``): a partially-prefilled request holds
+exactly ``ceil(pos_filled/page)`` pages, its next chunk attends the
+already-written lines through its page table (line-granular masking, so
+chunk boundaries need not be page-aligned), and the chunk's KV lines
+scatter mid-page into its pages.  Chunks pad to power-of-two buckets
+(compiles O(buckets)); the queue packs shortest-remaining-first within
+QOS rank so short interactive prompts cannot queue behind long batch
+ones.  Admission/billing integrate at chunk granularity:
+``adjust_pages`` grows a partial's GrpTRES holdings chunk-by-chunk
+(true holdings, not the worst-case reservation the classic paged path
+takes), a mid-prefill request is preemptible at chunk boundaries via
+the existing requeue path, and PREFILL trace spans carry
+``chunks``/``pos_filled`` attrs.  Greedy output is bit-identical to
+whole-prompt prefill; ``serve_stats`` counters feed ``sdiag``'s
+serve-step utilization section.
 """
 from __future__ import annotations
 
@@ -74,7 +97,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import init_cache, prefill
-from repro.models.model import decode_n, decode_step, prefill_suffix
+from repro.models.model import (
+    decode_n, decode_step, prefill_chunk, prefill_suffix,
+)
 from repro.models.paging import (
     NULL_PAGE, PageAllocator, PagedKVConfig, pages_for,
 )
@@ -107,11 +132,45 @@ class Request:
     _seq: int = field(default=0, repr=False)   # admission arrival order
     _slot: int = field(default=-1, repr=False)  # current decode slot (-1 = none)
     _est_pages: int = field(default=0, repr=False)  # paged: worst-case pages
+    # budgeted mode bills TRUE holdings, grown chunk-by-chunk, instead of
+    # the classic worst-case reservation
+    _held_pages: int = field(default=0, repr=False)
     # lifecycle tracing (populated only when the engine has a tracer)
     _trace: dict = field(default_factory=dict, repr=False)  # open spans
     _t_submit: Optional[float] = field(default=None, repr=False)
     _t_admit: Optional[float] = field(default=None, repr=False)
     _t_last: Optional[float] = field(default=None, repr=False)  # last token
+
+
+@dataclass
+class _PartialPrefill:
+    """An admitted request whose prompt is not fully prefilled yet.  It
+    owns a decode slot (so eviction/requeue ride the existing paths) but
+    its decode lane stays frozen — the page-table row the decode dispatch
+    sees is all-NULL until promotion — while ``pos_filled`` advances one
+    chunk at a time across engine iterations."""
+    req: Request
+    toks: np.ndarray                    # full resume/prefill token sequence
+    slot: int
+    pos_filled: int = 0                 # prompt lines already in the pool
+    pages: list = field(default_factory=list)   # pages covering pos_filled
+    n_shared: int = 0                   # leading prefix-cache pages
+    chunks: int = 0                     # chunks dispatched so far
+    span: object = None                 # open PREFILL trace span
+
+
+@dataclass
+class _ChunkPlan:
+    """One planned prefill chunk: bucketed tokens plus the per-line page
+    scatter targets, ready for dispatch (fused with decode or standalone)."""
+    part: _PartialPrefill
+    bucket: int                         # padded chunk length (power of two)
+    real: int                           # real tokens in the chunk
+    start: int                          # == part.pos_filled at plan time
+    tokens: np.ndarray                  # (bucket,) int32, zero-padded
+    row: np.ndarray                     # (pages_per_seq,) page-table row
+    pages: np.ndarray                   # (bucket,) per-line target page
+    offs: np.ndarray                    # (bucket,) per-line offset in page
 
 
 class DecodeEngine:
@@ -124,6 +183,7 @@ class DecodeEngine:
                  kv_page_size: int = 0,
                  kv_pages: Optional[int] = None,
                  prefix_cache: bool = False,
+                 max_batch_tokens: Optional[int] = None,
                  tracer: Optional[Tracer] = None):
         self.cfg = cfg
         self.params = params
@@ -181,6 +241,45 @@ class DecodeEngine:
         self._prefill_fn = self._build_prefill()
         self._suffix_prefill_fn = (self._build_suffix_prefill()
                                    if self.prefix is not None else None)
+        # ---- continuous batching (token-budgeted serve step) ----
+        # always defined (empty in classic mode) so the shared eviction /
+        # step paths need no mode guards
+        self._partials: list[_PartialPrefill] = []
+        self._prefill_slots: dict[int, _PartialPrefill] = {}
+        #: per-iteration counters behind sdiag's serve-step utilization
+        self.serve_stats = {"iterations": 0, "decode_tokens": 0,
+                            "prefill_tokens": 0, "prefill_chunks": 0}
+        self.max_batch_tokens: Optional[int] = None
+        self._mixed_step = None
+        if max_batch_tokens is not None:
+            if self.paging is None:
+                raise ValueError(
+                    "max_batch_tokens: continuous batching with chunked "
+                    "prefill needs the paged KV cache — a partial prefill "
+                    "holds ceil(pos_filled/page) pages, which the dense "
+                    "per-slot layout cannot express.  Pass kv_page_size "
+                    "> 0 (CLI: --max-batch-tokens implies --kv-paging)")
+            if not fused:
+                raise ValueError(
+                    "max_batch_tokens: the token-budgeted serve step "
+                    "fuses decode and prefill chunks into one dispatch, "
+                    "which needs fused=True (the host per-token loop has "
+                    "no budgeted equivalent)")
+            self.max_batch_tokens = int(max_batch_tokens)
+            assert self.max_batch_tokens >= 1, max_batch_tokens
+            b, buckets = 1, []
+            while b <= self.max_batch_tokens:
+                buckets.append(b)
+                b *= 2
+            # ascending: _plan_chunk picks the smallest bucket covering
+            # the remaining prompt that still fits the budget
+            self.chunk_buckets = tuple(buckets)
+            # mixed iterations decode 1 token/lane; reuse the chunked
+            # program when decode_chunk is already 1
+            self._decode_n1 = (self._decode_n if self.decode_chunk == 1
+                               else self._build_decode_n(1))
+            self._chunk_fn = self._build_chunk_prefill()
+            self._mixed_step = self._build_mixed_step()
 
     def _resolve_paging(self, kv_page_size: int,
                         kv_pages: Optional[int]) -> Optional[PagedKVConfig]:
@@ -241,9 +340,10 @@ class DecodeEngine:
 
         return step
 
-    def _build_decode_n(self):
+    def _build_decode_n(self, chunk: Optional[int] = None):
         cfg, run = self.cfg, self.run
-        chunk, cache_len = self.decode_chunk, self.cache_len
+        cache_len = self.cache_len
+        chunk = self.decode_chunk if chunk is None else chunk
 
         if self.paging is not None:
             @functools.partial(jax.jit, donate_argnums=(1,))
@@ -303,6 +403,19 @@ class DecodeEngine:
         # (cache_len=None -> S slots); the page scatter does the placement
         paged = self.paging is not None
 
+        if getattr(self, "_front_pad", False):
+            # SSM/hybrid bucketed prefill: real tokens sit at a traced
+            # chunk-aligned front offset, so one program per bucket
+            # serves every prompt length (front_pad/num_real are traced)
+            @jax.jit
+            def prefill_front_fn(params, tokens, front_pad, num_real,
+                                 last_pos):
+                return prefill(params, {"tokens": tokens}, cfg, run,
+                               cache_len=cache_len, last_pos=last_pos,
+                               front_pad=front_pad, num_real=num_real)
+
+            return prefill_front_fn
+
         @jax.jit
         def prefill_fn(params, tokens, last_pos):
             return prefill(params, {"tokens": tokens}, cfg, run,
@@ -325,18 +438,87 @@ class DecodeEngine:
 
         return suffix_fn
 
+    @staticmethod
+    def _scatter_chunk(cache, slices, pages, offs):
+        """Write a chunk's KV lines into the pool at per-line
+        (page, offset) targets.  Unlike the whole-page admission insert,
+        a chunk may start and end mid-page, so the write is
+        line-granular; pad lines target the null page (harmless
+        duplicate writes).  Traced inside the chunk/mixed programs."""
+        def put(pool_leaf, one_leaf):
+            lines = one_leaf[:, 0].astype(pool_leaf.dtype)   # (G,C,K,Dh)
+            return pool_leaf.at[:, pages, offs].set(lines)
+        return jax.tree.map(put, cache, slices)
+
+    def _build_chunk_prefill(self):
+        """Jitted standalone prefill chunk (budgeted mode): compute the
+        chunk against the pool, scatter its lines back, return (logits,
+        cache) — ONE dispatch per chunk.  Compiles once per chunk bucket:
+        ``start``/``last_pos`` and the page-table row (always
+        ``pages_per_seq`` wide) are traced, so every chunk of every
+        request at every depth reuses the same O(buckets) programs."""
+        cfg, run = self.cfg, self.run
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def chunk_fn(params, cache, tokens, page_table, start, last_pos,
+                     pages, offs):
+            logits, slices = prefill_chunk(
+                params, {"tokens": tokens}, cache, page_table, start, cfg,
+                run, last_pos=last_pos)
+            return logits, DecodeEngine._scatter_chunk(
+                cache, slices, pages, offs)
+
+        return chunk_fn
+
+    def _build_mixed_step(self):
+        """THE budgeted serve step: one dispatch running a prefill chunk
+        (compute + line scatter) and a full ``decode_chunk``-token decode
+        over every live lane — streaming a prefill must not drop decode
+        lanes to 1 token/dispatch.  The chunk reads the pre-decode,
+        pre-scatter pool state and its pages are disjoint from the
+        lanes' write targets, so fusing changes no math — greedy output
+        stays bit-identical to running the dispatches back-to-back."""
+        cfg, run, cache_len = self.cfg, self.run, self.cache_len
+        num_tokens = self.decode_chunk
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def mixed(params, cache, token, pos, remaining, done, eos, temps,
+                  key, page_table, limit, c_tokens, c_row, c_start,
+                  c_last, c_pages, c_offs):
+            c_logits, c_slices = prefill_chunk(
+                params, {"tokens": c_tokens}, cache, c_row, c_start, cfg,
+                run, last_pos=c_last)
+            cache = DecodeEngine._scatter_chunk(
+                cache, c_slices, c_pages, c_offs)
+            out = decode_n(params, cache, token, pos, remaining, done,
+                           eos, temps, key, cfg, run, num_tokens,
+                           cache_len, page_table=page_table, limit=limit)
+            return out + (c_logits,)
+
+        return mixed
+
     def _resolve_buckets(self, spec):
         """Power-of-two prompt-length buckets, or None (exact-length
-        prefill).  Bucketing pads the prompt tail, which is only sound
-        when pad tokens cannot leak into real state: full attention with
-        causal masking (no SSM recurrence to pollute) and a non-ring
-        cache (no sliding window), otherwise it silently degrades to the
-        exact path."""
+        prefill).  Full-attention configs pad the prompt TAIL (causal
+        masking keeps pads out of real state).  SSM/hybrid configs pad
+        the FRONT instead (``models.model.prefill`` front-pad mode): the
+        pad lands at a chunk-aligned offset whose masked positions are
+        the SSD scan's identity, so the recurrent state stays
+        bit-identical to the exact path.  Still refused — silently
+        degrading to exact prefill — for sliding-window ring caches (the
+        wrapped slot layout has no pad region), sinusoidal embeddings
+        (added before the front shift is known), and Pallas prefill (the
+        fused kernels take no validity mask)."""
+        self._front_pad = False
         if not spec:
             return None
-        attn_only = self.cfg.attn_every == 1 and self.cfg.ssm is None
-        if not attn_only or self.cfg.sliding_window is not None:
+        if self.cfg.sliding_window is not None:
             return None
+        attn_only = self.cfg.attn_every == 1 and self.cfg.ssm is None
+        if not attn_only:
+            if self.cfg.pos_embedding == "sinusoidal" or self.run.use_pallas:
+                return None
+            self._front_pad = True
         if spec == "auto":
             out, b = [], 32
             while b < self.cache_len:
@@ -360,6 +542,16 @@ class DecodeEngine:
         (unjitted) prefill and never touches this cache, so it reports
         0 there."""
         return int(self._prefill_fn._cache_size())
+
+    def chunk_compilations(self) -> int:
+        """Distinct chunked-prefill programs compiled so far (budgeted
+        mode): one per chunk bucket for the standalone dispatch plus one
+        per bucket for the fused decode+chunk step — O(buckets), never
+        O(prompt lengths x depths)."""
+        if self.max_batch_tokens is None:
+            return 0
+        return (int(self._chunk_fn._cache_size())
+                + int(self._mixed_step._cache_size()))
 
     # ----------------------------------------------------------- tracing ----
     def _trace_root(self, req: Request):
@@ -473,7 +665,7 @@ class DecodeEngine:
             req = self.admission.next_request(eligible=eligible)
             if req is None:
                 return
-            self._prefill_into(slot, req)
+            self._place(slot, req)
         # QOS preemption: each blocked preempting request evicts exactly
         # one victim slot (bounded per pass against cyclic QOS tables)
         for _ in range(self.num_slots):
@@ -483,6 +675,15 @@ class DecodeEngine:
                 return
             req, victim = pick
             slot = self._evict(victim)
+            self._place(slot, req)
+
+    def _place(self, slot: int, req: Request):
+        """Route an admitted request: budgeted mode enqueues a partial
+        prefill (chunked across iterations), classic mode prefills the
+        whole prompt in one blocking dispatch."""
+        if self.max_batch_tokens is not None:
+            self._start_prefill(slot, req)
+        else:
             self._prefill_into(slot, req)
 
     def _alloc_or_evict(self, need: int):
@@ -594,10 +795,23 @@ class DecodeEngine:
                 P = len(toks)
                 L = next(b for b in self._buckets if b >= P)
                 padded = np.zeros(L, np.int32)
-                padded[:P] = toks
-                logits, cache1 = self._prefill_fn(
-                    self.params, jnp.asarray(padded)[None],
-                    jnp.asarray(P - 1, jnp.int32))
+                if self._front_pad:
+                    # SSM/hybrid: pad the FRONT, at a chunk-aligned
+                    # offset so the real tokens' SSD chunk boundaries
+                    # match the unpadded run bit-for-bit
+                    Q = self.cfg.ssm.chunk if self.cfg.ssm else 1
+                    f = ((L - P) // Q) * Q
+                    padded[f:f + P] = toks
+                    logits, cache1 = self._prefill_fn(
+                        self.params, jnp.asarray(padded)[None],
+                        jnp.asarray(f, jnp.int32),
+                        jnp.asarray(P, jnp.int32),
+                        jnp.asarray(f + P - 1, jnp.int32))
+                else:
+                    padded[:P] = toks
+                    logits, cache1 = self._prefill_fn(
+                        self.params, jnp.asarray(padded)[None],
+                        jnp.asarray(P - 1, jnp.int32))
             else:
                 L = len(toks)
                 prompt = jnp.asarray(toks, jnp.int32)[None]
@@ -683,6 +897,16 @@ class DecodeEngine:
                 "DECODE", cat="decode", parent=root, slot=slot)
         self._maybe_finish(slot)
 
+    def _hold_pages(self, req: Request, delta: int):
+        """Budgeted mode: move the request's GrpTRES kv_pages hold by
+        ``delta`` (chunk-by-chunk TRUE holdings, not the classic
+        worst-case reservation).  No-op in classic mode, where
+        ``_prefill_into`` reserves ``_est_pages`` up front."""
+        if self.max_batch_tokens is None or delta == 0:
+            return
+        self.admission.adjust_pages(req, delta)
+        req._held_pages += delta
+
     def _billed_pages(self, slot: int) -> float:
         """KV-page residency this slot bills per step: each page costs
         ``1 / holders``, so a prefix page shared by N live requests bills
@@ -710,7 +934,12 @@ class DecodeEngine:
                         self._page_holders[p] = h
                     else:
                         self._page_holders.pop(p, None)
-        self.admission.adjust_pages(req, -req._est_pages)
+        if self.max_batch_tokens is not None:
+            # budgeted mode holds true pages, grown chunk-by-chunk
+            self.admission.adjust_pages(req, -req._held_pages)
+            req._held_pages = 0
+        else:
+            self.admission.adjust_pages(req, -req._est_pages)
         self._slot_pages[slot] = []
         self.page_tables[slot] = NULL_PAGE
 
@@ -730,13 +959,20 @@ class DecodeEngine:
 
     def _evict(self, victim: Request) -> int:
         """Evict a running request from its slot; it requeues at the head
-        of its QOS class in its tenant queue with partial output retained."""
+        of its QOS class in its tenant queue with partial output retained.
+        A mid-prefill partial (budgeted mode) is likewise preemptible —
+        eviction lands at a chunk boundary, so its already-written pages
+        simply free and the resume prefill replays the prompt."""
         victim.preemptions += 1
-        self._trace_decode_end(victim, "PREEMPT")
-        slot = self._vacate(victim)
         self.metrics.counter(
             METRIC_SERVE_PREEMPTIONS, "evicted decode slots").inc()
-        return slot
+        part = self._prefill_slots.get(victim._slot)
+        if part is not None and part.req is victim:
+            slot = victim._slot
+            self._requeue_partial(part, "PREEMPT")
+            return slot
+        self._trace_decode_end(victim, "PREEMPT")
+        return self._vacate(victim)
 
     def _finish(self, slot: int):
         req = self.slots[slot]
@@ -813,7 +1049,7 @@ class DecodeEngine:
             "serve_page_starvations",
             "slots requeued on page-pool exhaustion").inc()
 
-    def _ensure_pages(self, active: list):
+    def _ensure_pages(self, active: list, steps: Optional[int] = None):
         """Grow each live slot's allocation to cover the coming chunk
         (on-demand growth at decode-time page boundaries).  The +2
         headroom keeps the slot's freeze boundary strictly beyond the
@@ -823,6 +1059,7 @@ class DecodeEngine:
         cannot cover even its current position requeues starved (its
         ``limit`` would otherwise let it write the null page)."""
         ps = self.paging.page_size
+        steps_cap = self.decode_chunk if steps is None else steps
         for i in list(active):
             req = self.slots[i]
             if req is None:                    # evicted by a reclaim below
@@ -830,7 +1067,7 @@ class DecodeEngine:
                 continue
             # a nearly-finished slot only needs pages for the tokens it
             # may still generate — don't pin headroom it can never use
-            steps = min(self.decode_chunk, max(int(self.remaining[i]), 1))
+            steps = min(steps_cap, max(int(self.remaining[i]), 1))
             target = min(int(self.pos[i]) + steps + 2, self.cache_len)
             need = pages_for(target, ps) - len(self._slot_pages[i])
             if need <= 0:
@@ -849,8 +1086,10 @@ class DecodeEngine:
                     for p in got:
                         self._page_holders[p] = \
                             self._page_holders.get(p, 0) + 1
-                # no adjust_pages here: the tenant's GrpTRES hold already
-                # reserved the worst-case footprint at admission
+                # classic mode reserved the worst-case footprint at
+                # admission (this is a no-op there); budgeted mode grows
+                # the TRUE hold page-by-page
+                self._hold_pages(req, len(got))
                 n0 = len(self._slot_pages[i])
                 self._slot_pages[i].extend(got)
                 self.page_tables[i, n0:n0 + len(got)] = got
@@ -859,11 +1098,340 @@ class DecodeEngine:
                 self._requeue_starved(i)
                 active.remove(i)
 
+    # --------------------------------------- chunked prefill (budgeted) ----
+    def _start_prefill(self, slot: int, req: Request):
+        """Admit a request as a *partial prefill*: it takes the slot (so
+        the existing eviction/requeue paths see it) but decodes nothing
+        until ``_step_budgeted`` has streamed its whole prompt through
+        chunk dispatches.  With the prefix cache, matched pages map
+        read-only immediately and ``pos_filled`` starts past them — the
+        chunks only ever cover the suffix."""
+        toks = self._resume_tokens(req)
+        tr = self.tracer
+        root = self._trace_root(req)
+        span = None
+        if tr is not None:
+            if root is not None:
+                tr.event("ADMIT", root, slot=slot)
+            span = tr.begin("PREFILL", cat="prefill", parent=root,
+                            tokens=len(toks), resume=bool(req.output),
+                            chunked=True)
+        shared = []
+        if self.prefix is not None:
+            shared = self.prefix.acquire(self.prefix.match(toks)) or []
+            # reuse is decided (and counted) at admission: the pages are
+            # pinned from here on, unlike the classic path there is no
+            # later abandon-the-match fallback — chunks allocate one
+            # bucket's worth at a time, so the all-or-nothing shortfall
+            # that forces it cannot arise
+            if shared:
+                self.metrics.counter(
+                    METRIC_SERVE_PREFIX_HITS,
+                    "admissions reusing cached prefix pages").inc()
+                self.metrics.counter(
+                    METRIC_SERVE_PREFIX_REUSED_TOKENS,
+                    "prompt tokens served from cached pages").inc(
+                    len(shared) * self.paging.page_size)
+                for p in shared:
+                    self._page_holders[p] = \
+                        self._page_holders.get(p, 0) + 1
+            else:
+                self.metrics.counter(
+                    METRIC_SERVE_PREFIX_MISSES,
+                    "admissions with no cached prefix").inc()
+        self.slots[slot] = req
+        req._slot = slot
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+        self.remaining[slot] = 0       # frozen until promotion
+        part = _PartialPrefill(
+            req=req, toks=toks, slot=slot,
+            pos_filled=len(shared) * self.paging.page_size,
+            pages=list(shared), n_shared=len(shared), span=span)
+        self._hold_pages(req, len(shared))
+        self._partials.append(part)
+        self._prefill_slots[slot] = part
+
+    def _pack_order(self) -> list:
+        """Chunk-packing order: QOS rank first, then SHORTEST REMAINING
+        prefill, then arrival.  Shortest-first is what kills head-of-line
+        blocking — a 10-token interactive prompt finishes in one chunk
+        even when a 10k-token batch prompt arrived first."""
+        qos_t = self.admission.qos_table
+
+        def rank(part):
+            q = qos_t.get(part.req.qos)
+            prio = q.priority if q is not None else 0
+            return (-prio, len(part.toks) - part.pos_filled,
+                    part.req._seq)
+
+        return sorted(self._partials, key=rank)
+
+    def _plan_chunk(self, part: _PartialPrefill, budget: int,
+                    min_bucket: int = 1) -> Optional[_ChunkPlan]:
+        """Pick the next chunk's bucket, grow the partial's pages to
+        cover it, and lay out the per-line scatter targets.  Returns None
+        when no bucket fits the budget or the pool starves the partial
+        back to its tenant queue (pages freed, holdings returned).
+
+        ``min_bucket`` declines chunks that neither reach that size nor
+        finish the prompt: the drain loop uses it so a long prompt's tail
+        never dribbles out in tiny dispatches (a whole dispatch for a few
+        tokens), while a short prompt — which such a chunk COMPLETES, and
+        whose first token it unblocks — still packs at any size."""
+        rem = len(part.toks) - part.pos_filled
+        assert rem > 0, (part.req.rid, part.pos_filled)
+        bucket = 0
+        for b in self.chunk_buckets:
+            if b > budget:
+                break
+            bucket = b
+            if b >= rem:                # smallest bucket covering the rest
+                break
+        if bucket == 0 or (bucket < min_bucket and bucket < rem):
+            return None
+        real = min(rem, bucket)
+        start = part.pos_filled
+        ps = self.paging.page_size
+        need = pages_for(start + real, ps) - len(part.pages)
+        if need > 0:
+            got = self._alloc_or_evict(need)
+            if got is None and self._reclaim_one_victim(part.req):
+                got = self._alloc_or_evict(need)
+            if got is None:
+                # pool exhausted mid-prefill: starve the partial back to
+                # the queue (page-budget admission re-admits it later)
+                self._requeue_partial(part, "STARVED")
+                self.metrics.counter(
+                    "serve_page_starvations",
+                    "slots requeued on page-pool exhaustion").inc()
+                return None
+            if self.prefix is not None:
+                for p in got:
+                    self._page_holders[p] = \
+                        self._page_holders.get(p, 0) + 1
+            part.pages.extend(got)
+            self._hold_pages(part.req, len(got))
+        row = np.full(self.paging.pages_per_seq, NULL_PAGE, np.int32)
+        row[:len(part.pages)] = part.pages
+        tokens = np.zeros(bucket, np.int32)
+        tokens[:real] = part.toks[start:start + real]
+        pages = np.full(bucket, NULL_PAGE, np.int32)
+        offs = np.zeros(bucket, np.int32)
+        for j in range(real):           # pad lines write the null page
+            pages[j] = part.pages[(start + j) // ps]
+            offs[j] = (start + j) % ps
+        return _ChunkPlan(part=part, bucket=bucket, real=real, start=start,
+                          tokens=tokens, row=row, pages=pages, offs=offs)
+
+    def _dispatch_chunk(self, plan: _ChunkPlan):
+        """Standalone chunk dispatch (no decode lanes to fuse with).
+        Deliberately NOT synced: a non-final chunk's outputs feed only
+        the (async, in-program) line scatter, so the host keeps planning
+        while the device works; the promotion argmax syncs the final
+        chunk.  The prefill histogram therefore times submission here —
+        device time shows up in the PREFILL trace span (admit ->
+        promotion)."""
+        with self.metrics.timer("serve_prefill_seconds", "prefill latency"):
+            logits, self.cache = self._chunk_fn(
+                self.params, self.cache, jnp.asarray(plan.tokens)[None],
+                jnp.asarray(plan.row)[None],
+                jnp.asarray(plan.start, jnp.int32),
+                jnp.asarray(plan.real - 1, jnp.int32),
+                jnp.asarray(plan.pages), jnp.asarray(plan.offs))
+        return logits
+
+    def _finish_chunk(self, plan: _ChunkPlan, logits):
+        """Advance the partial past a dispatched chunk (the KV lines were
+        scattered inside the chunk/mixed program); the final chunk
+        promotes the request to a live decode lane (its first output
+        token is this chunk's last-position argmax — exactly the
+        whole-prompt prefill's)."""
+        part = plan.part
+        part.pos_filled = plan.start + plan.real
+        part.chunks += 1
+        self.serve_stats["prefill_tokens"] += plan.real
+        self.serve_stats["prefill_chunks"] += 1
+        if part.pos_filled >= len(part.toks):
+            self._partials.remove(part)
+            self._promote(part, logits)
+
+    def _promote(self, part: _PartialPrefill, logits):
+        """Last chunk done: unfreeze the slot into a decode lane."""
+        req, slot = part.req, part.slot
+        tr = self.tracer
+        root = self._trace_root(req)
+        if part.span is not None:
+            now = tr.clock()
+            tr.end(part.span, ts=now, chunks=part.chunks,
+                   pos_filled=part.pos_filled, prefix_pages=part.n_shared,
+                   pages_allocated=len(part.pages) - part.n_shared)
+        self.page_tables[slot] = NULL_PAGE
+        self.page_tables[slot, :len(part.pages)] = part.pages
+        self._slot_pages[slot] = part.pages
+        if self.prefix is not None:
+            # donate the complete prompt pages to the radix index;
+            # holder refs were registered page-by-page as chunks grew
+            self.prefix.insert(part.toks, part.pages)
+        resume = bool(req.output)
+        if resume:
+            tok = int(req.output[-1])      # resume: last token re-decodes
+        else:
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.output.append(tok)
+        self.pos[slot] = len(part.toks)
+        self.last_tok[slot] = tok
+        self.remaining[slot] = req.max_new_tokens - len(req.output)
+        self.admission.charge(req, kv_pages=self._billed_pages(slot))
+        self.metrics.counter("serve_requests_admitted").inc()
+        self.metrics.counter(
+            METRIC_SERVE_TENANT_ADMITTED,
+            "admissions per tenant").inc(tenant=req.tenant)
+        if tr is not None:
+            now = tr.clock()
+            if resume:
+                if root is not None:
+                    tr.event("RESUME", root, slot=slot)
+            else:
+                # first output token came from the final chunk's argmax:
+                # TTFT = admit -> that chunk's sync (resumes produced
+                # their first token pre-eviction)
+                if root is not None:
+                    tr.event("first_token", root)
+                if req._t_admit is not None:
+                    tr.slo.ttft(now - req._t_admit, req.tenant, req.qos)
+            req._t_last = now
+            req._trace["decode"] = tr.begin(
+                "DECODE", cat="decode", parent=root, slot=slot)
+        del self._prefill_slots[slot]
+        self._maybe_finish(slot)
+
+    def _requeue_partial(self, part: _PartialPrefill, reason: str):
+        """Abort a mid-prefill partial at a chunk boundary (preemption or
+        page starvation): free its pages, return its chunk-granular
+        holdings, clear the slot, and requeue — the resume prefill
+        replays prompt + retained output exactly like a decode victim."""
+        req, slot = part.req, part.slot
+        tr = self.tracer
+        if part.span is not None:
+            tr.end(part.span, aborted=True, chunks=part.chunks,
+                   pos_filled=part.pos_filled)
+        root = self._trace_root(req)
+        if tr is not None and root is not None:
+            tr.event(reason, root)
+        if part.pages:
+            self.allocator.free(part.pages)
+            if self.prefix is not None:
+                for p in part.pages:
+                    h = self._page_holders.get(p, 0) - 1
+                    if h > 0:
+                        self._page_holders[p] = h
+                    else:
+                        self._page_holders.pop(p, None)
+        self._hold_pages(req, -req._held_pages)
+        self.slots[slot] = None
+        req._slot = -1
+        self._slot_pages[slot] = []
+        self.page_tables[slot] = NULL_PAGE
+        self._partials.remove(part)
+        del self._prefill_slots[slot]
+        self.admission.release(req)
+        self.admission.requeue(req)
+
+    def _decode_active(self) -> list:
+        """Slots with a LIVE decode lane (occupied, not mid-prefill)."""
+        return [i for i, r in enumerate(self.slots)
+                if r is not None and i not in self._prefill_slots]
+
+    def _step_budgeted(self) -> int:
+        """One token-budgeted iteration (continuous batching): decode
+        lanes claim budget first (``decode_chunk`` tokens each, dropping
+        to 1 only when that alone would blow the budget), then prefill
+        chunks pack into the remainder — the head chunk FUSED into the
+        same dispatch as decode, any leftover budget drained through
+        standalone chunk dispatches."""
+        st = self.serve_stats
+        st["iterations"] += 1
+        T = self.max_batch_tokens
+        decode_active = self._decode_active()
+        d = self.decode_chunk
+        if (self._partials and decode_active
+                and self.decode_chunk * len(decode_active) > T):
+            d = 1
+        if decode_active:
+            self._ensure_pages(decode_active, steps=d)
+            decode_active = self._decode_active()
+        budget = T
+        head_plan = None
+        if self._partials and decode_active:
+            budget -= d * len(decode_active)
+            for part in self._pack_order():
+                if budget < 1:
+                    break
+                if self._prefill_slots.get(part.slot) is not part:
+                    continue            # starved away by an earlier plan
+                head_plan = self._plan_chunk(part, budget)
+                if head_plan is not None:
+                    budget -= head_plan.bucket
+                    break
+            # planning may have reclaim-evicted a decode slot
+            decode_active = self._decode_active()
+        if decode_active:
+            if head_plan is not None and d == self.decode_chunk:
+                total, chunk_out = self._step_fused(
+                    decode_active, num_tokens=d, chunk_plan=head_plan)
+                st["decode_tokens"] += total
+                self._finish_chunk(head_plan, chunk_out)
+            else:
+                # budget too tight to fuse a full decode_chunk alongside
+                # the chunk — dispatch the chunk standalone (async), let
+                # the decode queue behind it, THEN finish the chunk:
+                # promotion mid-iteration would un-freeze a lane the
+                # in-flight decode already treats as done
+                c_logits = (self._dispatch_chunk(head_plan)
+                            if head_plan is not None else None)
+                total, _ = self._step_fused(decode_active, num_tokens=d)
+                st["decode_tokens"] += total
+                if head_plan is not None:
+                    self._finish_chunk(head_plan, c_logits)
+        elif head_plan is not None:
+            # the planned chunk's decode companions vanished (reclaimed):
+            # run it standalone
+            self._finish_chunk(head_plan, self._dispatch_chunk(head_plan))
+        # drain the remaining budget with standalone chunk dispatches
+        # (declining runt chunks that don't finish a prompt — each costs
+        # a whole dispatch either way)
+        min_bucket = max(1, self.chunk_buckets[-1] // 4)
+        while budget >= 1 and self._partials:
+            progressed = False
+            for part in self._pack_order():
+                if budget < 1:
+                    break
+                if self._prefill_slots.get(part.slot) is not part:
+                    continue
+                plan = self._plan_chunk(part, budget,
+                                        min_bucket=min_bucket)
+                if plan is None:
+                    continue
+                self._finish_chunk(plan, self._dispatch_chunk(plan))
+                budget -= plan.bucket
+                progressed = True
+            if not progressed:
+                break
+        return (len([r for r in self.slots if r is not None])
+                + self.admission.pending())
+
     # -------------------------------------------------------------- step ----
     def step(self) -> int:
         """Admit + one batched decode dispatch (``decode_chunk`` tokens on
-        the fused path, one on the host path).  Returns #active + #queued."""
+        the fused path, one on the host path).  Returns #active + #queued.
+
+        Budgeted mode (``max_batch_tokens``) runs the token-budgeted
+        continuous-batching iteration instead: decode lanes plus packed
+        prefill chunks under one budget."""
         self._admit()
+        if self.max_batch_tokens is not None:
+            return self._step_budgeted()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if self.paging is not None and active:
             self._ensure_pages(active)
@@ -880,10 +1448,17 @@ class DecodeEngine:
         return (len([r for r in self.slots if r is not None])
                 + self.admission.pending())
 
-    def _step_fused(self, active: list):
-        """Device-resident chunk: one dispatch, one host sync."""
-        done = np.array([self.slots[i] is None for i in
-                         range(self.num_slots)])
+    def _step_fused(self, active: list, num_tokens: Optional[int] = None,
+                    chunk_plan: Optional[_ChunkPlan] = None):
+        """Device-resident chunk: one dispatch, one host sync.
+
+        Budgeted mode passes ``num_tokens`` (tokens per lane this
+        iteration) and optionally ``chunk_plan`` — a prefill chunk fused
+        into the SAME dispatch.  Mid-prefill slots count as done (their
+        lanes freeze; capacity 0 routes their writes to the null page).
+        Returns ``(generated_tokens, chunk_outputs_or_None)``."""
+        done = np.array([self.slots[i] is None or i in self._prefill_slots
+                         for i in range(self.num_slots)])
         eos = np.array([
             (self.slots[i].eos_id if self.slots[i] is not None
              and self.slots[i].eos_id is not None else -1)
@@ -896,19 +1471,40 @@ class DecodeEngine:
                        track=("serving:engine", "dispatch"),
                        active=len(active)) if tr is not None else None
         t0 = time.perf_counter()
+        chunk_out = None
         if self.paging is not None:
             limit = np.array([
                 self._capacity(i) if self.slots[i] is not None
                 else self.cache_len
                 for i in range(self.num_slots)], np.int32)
-            toks, self.cache, token, pos, remaining, done_d, self._key = \
-                self._decode_n(
+            fn = self._decode_n
+            if num_tokens is not None and num_tokens != self.decode_chunk:
+                fn = self._decode_n1   # budgeted mixed iterations: 1/lane
+            if chunk_plan is not None:
+                (toks, self.cache, token, pos, remaining, done_d,
+                 self._key, chunk_out) = self._mixed_step(
                     self.params, self.cache, jnp.asarray(self.last_tok),
                     jnp.asarray(self.pos.astype(np.int32)),
                     jnp.asarray(self.remaining.astype(np.int32)),
-                    jnp.asarray(done), jnp.asarray(eos), jnp.asarray(temps),
-                    self._key, jnp.asarray(self.page_tables),
-                    jnp.asarray(limit))
+                    jnp.asarray(done), jnp.asarray(eos),
+                    jnp.asarray(temps), self._key,
+                    jnp.asarray(self.page_tables), jnp.asarray(limit),
+                    jnp.asarray(chunk_plan.tokens)[None],
+                    jnp.asarray(chunk_plan.row)[None],
+                    jnp.asarray(chunk_plan.start, jnp.int32),
+                    jnp.asarray(chunk_plan.real - 1, jnp.int32),
+                    jnp.asarray(chunk_plan.pages),
+                    jnp.asarray(chunk_plan.offs))
+            else:
+                toks, self.cache, token, pos, remaining, done_d, \
+                    self._key = fn(
+                        self.params, self.cache,
+                        jnp.asarray(self.last_tok),
+                        jnp.asarray(self.pos.astype(np.int32)),
+                        jnp.asarray(self.remaining.astype(np.int32)),
+                        jnp.asarray(done), jnp.asarray(eos),
+                        jnp.asarray(temps), self._key,
+                        jnp.asarray(self.page_tables), jnp.asarray(limit))
         else:
             toks, self.cache, token, pos, remaining, done_d, self._key = \
                 self._decode_n(
@@ -981,6 +1577,7 @@ class DecodeEngine:
             METRIC_SERVE_TENANT_TOKENS, "generated tokens per tenant")
         for tenant, n in tenant_tokens.items():
             tok_counter.inc(n, tenant=tenant)
+        return total, chunk_out
 
     def _step_host(self, active: list):
         """Original per-token host loop (baseline / reference path)."""

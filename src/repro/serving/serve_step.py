@@ -9,6 +9,12 @@ at global_batch=1 the state shards over `model` only).
 shardings around ``models.model.decode_n`` (N tokens per dispatch, fused
 sampling + stop masking), so the fused signature the serving engine runs
 can be lowered/cost-analyzed by the dry-run machinery too.
+
+``make_chunked_serve_step`` is the continuous-batching twin: ONE fused
+dispatch running a prefill chunk (``models.model.prefill_chunk``) plus a
+1-token ``decode_n`` over every lane against the shared paged pool —
+exactly what the engine's token-budgeted serve step dispatches when a
+partial prefill and live decode lanes coexist.
 """
 from __future__ import annotations
 
@@ -20,7 +26,8 @@ from repro.configs.base import InputShape, ModelConfig, RunConfig
 from repro.core import sharding as shd
 from repro.core.actshard import activation_sharding
 from repro.models import abstract_params, init_cache
-from repro.models.model import decode_n, decode_step
+from repro.models.model import decode_n, decode_step, prefill_chunk
+from repro.models.paging import PagedKVConfig
 
 
 def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
@@ -96,3 +103,77 @@ def fused_serve_step_lowering_args(cfg: ModelConfig, run: RunConfig,
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     return (ap, cache, vec(jnp.int32), vec(jnp.int32), vec(jnp.int32),
             vec(jnp.bool_), vec(jnp.int32), vec(jnp.float32), key)
+
+
+def _chunked_paging(cache_len: int, batch: int,
+                    page_size: int) -> PagedKVConfig:
+    """The pool layout the budgeted engine defaults to: one dense HBM
+    budget's worth of pages (batch * cache_len lines) plus the null page."""
+    return PagedKVConfig.for_budget(batch * cache_len, page_size, cache_len)
+
+
+def make_chunked_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                            batch: int, cache_len: int,
+                            page_size: int = 16, num_tokens: int = 8):
+    """Returns the jitted token-budgeted mixed step the budgeted engine
+    dispatches: f(params, cache, token, pos, remaining, done, eos, temps,
+    key, page_table, limit, c_tokens, c_row, c_start, c_last, c_pages,
+    c_offs) -> (tokens, cache, token, pos, remaining, done, key,
+    c_logits) — a prefill chunk (length = c_tokens' trailing dim, one
+    program per chunk bucket; compute + per-line scatter) fused with a
+    ``num_tokens``-token decode over every lane, both against the shared
+    paged pool."""
+    from repro.serving.engine import DecodeEngine
+    paging = _chunked_paging(cache_len, batch, page_size)
+    p_sh = shd.param_shardings(cfg, mesh, run)
+    cache_abs = init_cache(cfg, batch, cache_len, abstract=True,
+                           paging=paging)
+    c_sh = shd.cache_shardings(cfg, mesh, run, cache_abs, paging=True)
+    act_rules = shd.make_activation_rules(cfg, mesh, run)
+
+    def step(params, cache, token, pos, remaining, done, eos, temps, key,
+             page_table, limit, c_tokens, c_row, c_start, c_last,
+             c_pages, c_offs):
+        with activation_sharding(act_rules):
+            c_logits, c_slices = prefill_chunk(
+                params, {"tokens": c_tokens}, cache, c_row, c_start, cfg,
+                run, last_pos=c_last)
+            cache = DecodeEngine._scatter_chunk(
+                cache, c_slices, c_pages, c_offs)
+            out = decode_n(params, cache, token, pos, remaining, done,
+                           eos, temps, key, cfg, run, num_tokens,
+                           cache_len, page_table=page_table, limit=limit)
+            return out + (c_logits,)
+
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh) + (None,) * 15,
+        out_shardings=(None, c_sh) + (None,) * 6,
+        donate_argnums=(1,),
+    )
+
+
+def chunked_serve_step_lowering_args(cfg: ModelConfig, run: RunConfig,
+                                     mesh: Mesh, shape: InputShape,
+                                     chunk: int = 64, page_size: int = 16):
+    """Abstract args matching ``make_chunked_serve_step`` for ``.lower()``."""
+    B = shape.global_batch
+    paging = _chunked_paging(shape.seq_len, B, page_size)
+    ap = abstract_params(cfg)
+    cache_abs = init_cache(cfg, B, shape.seq_len, abstract=True,
+                           paging=paging)
+    c_sh = shd.cache_shardings(cfg, mesh, run, cache_abs, paging=True)
+    cache = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        cache_abs, c_sh)
+    vec = lambda dt: jax.ShapeDtypeStruct((B,), dt)  # noqa: E731
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    table = jax.ShapeDtypeStruct((B, paging.pages_per_seq), jnp.int32)
+    c_tokens = jax.ShapeDtypeStruct((1, chunk), jnp.int32)
+    c_row = jax.ShapeDtypeStruct((1, paging.pages_per_seq), jnp.int32)
+    c_line = jax.ShapeDtypeStruct((chunk,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return (ap, cache, vec(jnp.int32), vec(jnp.int32), vec(jnp.int32),
+            vec(jnp.bool_), vec(jnp.int32), vec(jnp.float32), key,
+            table, vec(jnp.int32), c_tokens, c_row, scalar, scalar,
+            c_line, c_line)

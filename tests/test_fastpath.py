@@ -229,13 +229,15 @@ def test_bucketed_prefill_compiles_once_per_bucket(tiny_model):
 
 
 def test_buckets_refused_for_recurrent_or_ring_caches():
-    """Pad tails leak into SSM recurrences and ring caches — bucketing
-    must silently fall back to exact-length prefill there."""
+    """SSM/hybrid configs now bucket via FRONT padding (chunk-aligned
+    pads are the SSD scan's identity), so only ring caches — whose
+    wrapped slot layout has no pad region — still silently fall back to
+    exact-length prefill."""
     from repro.models import init_params
     ssm_cfg = get_reduced_config("mamba2-780m")
     eng = DecodeEngine(ssm_cfg, init_params(ssm_cfg, 0), num_slots=1,
                        cache_len=32, prefill_buckets="auto")
-    assert eng.prefill_buckets is None
+    assert eng.prefill_buckets is not None and eng._front_pad
     win_cfg = dataclasses.replace(get_reduced_config("stablelm-3b"),
                                   sliding_window=8)
     eng = DecodeEngine(win_cfg, init_params(win_cfg, 0), num_slots=1,
