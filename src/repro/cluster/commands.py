@@ -331,8 +331,9 @@ def sdiag(cluster: Optional[Cluster] = None, tracer=None,
     """``sdiag``-style diagnostics: scheduler cycle statistics (from the
     cluster controller), admission-controller cycle statistics (from the
     serving layer), per-tenant serving SLO percentiles (from the
-    tracer's derived histograms), and serve-step utilization (from a
-    budgeted DecodeEngine's per-iteration counters).  Any subset of
+    tracer's derived histograms), serve-step utilization (from a
+    budgeted DecodeEngine's per-iteration counters), and speculative
+    decoding acceptance (from a speculating engine).  Any subset of
     sources may be given; sections for absent sources are simply
     omitted."""
     sections = []
@@ -377,6 +378,21 @@ def sdiag(cluster: Optional[Cluster] = None, tracer=None,
             f"\tDecode tokens:    {st['decode_tokens']} ({d_pct:.0%})",
             f"\tPrefill tokens:   {st['prefill_tokens']} ({p_pct:.0%}, "
             f"{st['prefill_chunks']} chunks)",
+        ]))
+    if engine is not None and getattr(engine, "speculate", 0):
+        st = engine.spec_stats
+        rate = st["accepted"] / st["proposed"] if st["proposed"] else 0.0
+        run_len = st["emitted"] / st["rounds"] if st["rounds"] else 0.0
+        by = ", ".join(f"{k}: {v}"
+                       for k, v in sorted(st["proposed_by"].items()))
+        sections.append("\n".join([
+            "Speculative decoding:",
+            f"\tDraft length (k): {engine.speculate}",
+            f"\tVerify rounds:    {st['rounds']}",
+            f"\tProposed:         {st['proposed']}"
+            + (f" ({by})" if by else ""),
+            f"\tAccepted:         {st['accepted']} ({rate:.0%})",
+            f"\tTokens/round:     {run_len:.2f}",
         ]))
     if tracer is not None:
         sections.append("Serving SLO (per tenant/QOS):\n"

@@ -47,6 +47,17 @@ def resolve_chunked_paging(max_batch_tokens, kv_paging: int) -> int:
     return kv_paging
 
 
+def resolve_spec_paging(speculate: int, kv_paging: int) -> int:
+    """--speculate implies --kv-paging: the verify scatter routes draft
+    KV lines through per-line page targets (rejected lines die on the
+    null page), which the dense cache cannot express."""
+    if speculate and not kv_paging:
+        print(f"[serve] --speculate implies --kv-paging: using "
+              f"{DEFAULT_PREFIX_PAGE_SIZE}-line pages")
+        return DEFAULT_PREFIX_PAGE_SIZE
+    return kv_paging
+
+
 def parse_tenants(spec: str, shares: str = "") -> dict[str, int]:
     """``alice:8,bob:1`` (or ``--tenants alice,bob --shares 8,1``) ->
     {"alice": 8, "bob": 1}."""
@@ -135,6 +146,25 @@ def main(argv=None) -> int:
                          "head-of-line blocking short ones (bare flag: "
                          "T=512; implies --kv-paging "
                          f"{DEFAULT_PREFIX_PAGE_SIZE})")
+    ap.add_argument("--speculate", type=int, nargs="?", const=4,
+                    default=0, metavar="K",
+                    help="speculative decoding: draft up to K tokens per "
+                         "lane and verify them in ONE batched target "
+                         "dispatch — greedy output stays bit-identical, "
+                         "temperature uses rejection sampling (bare "
+                         "flag: K=4; implies --kv-paging "
+                         f"{DEFAULT_PREFIX_PAGE_SIZE})")
+    ap.add_argument("--spec-source", default="ngram",
+                    choices=("ngram", "model"),
+                    help="draft source: 'ngram' prompt-lookup (free, fed "
+                         "by finished requests) or 'model' (a tiny draft "
+                         "model with its own dense KV cache)")
+    ap.add_argument("--draft-model", default=None, choices=ARCH_IDS,
+                    metavar="ARCH",
+                    help="with --spec-source model: architecture to draft "
+                         "with (always reduced; must share the target's "
+                         "vocabulary). Default: a 1-layer shrink of the "
+                         "target config")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                          "synthetic request (exercises --prefix-cache)")
@@ -177,6 +207,12 @@ def main(argv=None) -> int:
     use_pallas = resolve_use_pallas(args.use_pallas, jax.default_backend())
     kv_paging = resolve_prefix_paging(args.prefix_cache, args.kv_paging)
     kv_paging = resolve_chunked_paging(args.max_batch_tokens, kv_paging)
+    kv_paging = resolve_spec_paging(args.speculate, kv_paging)
+    draft_cfg = None
+    if args.draft_model is not None:
+        draft_cfg = get_reduced_config(args.draft_model)
+        assert draft_cfg.vocab_size == cfg.vocab_size, \
+            "--draft-model must share the target's vocabulary"
     engine = DecodeEngine(cfg, params, num_slots=args.slots,
                           cache_len=args.cache_len, metrics=metrics,
                           admission=admission,
@@ -188,7 +224,10 @@ def main(argv=None) -> int:
                           kv_pages=args.kv_pages,
                           prefix_cache=args.prefix_cache,
                           max_batch_tokens=args.max_batch_tokens,
-                          tracer=tracer)
+                          tracer=tracer,
+                          speculate=args.speculate,
+                          spec_source=args.spec_source,
+                          draft_model=draft_cfg)
     rng = np.random.default_rng(args.seed)
     names = list(tenants)
     qos_cycle = [q.strip() for q in args.qos.split(",") if q.strip()] \
@@ -196,12 +235,22 @@ def main(argv=None) -> int:
     assert args.shared_prefix < args.cache_len, "--shared-prefix too long"
     system = rng.integers(2, cfg.vocab_size,
                           args.shared_prefix).astype(np.int32)
+    if args.speculate and args.shared_prefix >= 8:
+        # tile a short phrase so prompt-lookup drafts have material
+        phrase = system[:8]
+        system = np.tile(phrase, -(-args.shared_prefix // 8))[
+            :args.shared_prefix]
     requests = []
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.cache_len // 4))
         prompt = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
         if args.shared_prefix:
             prompt = np.concatenate([system, prompt])[:args.cache_len - 1]
+            if args.speculate and args.shared_prefix >= 8:
+                # land the prompt tail back inside the tiled phrase so
+                # n-gram lookups fire from the first decode step
+                prompt = np.concatenate([prompt, system[:8]])[
+                    :args.cache_len - 1]
         requests.append(Request(
             rid=rid,
             prompt=prompt,
@@ -243,6 +292,14 @@ def main(argv=None) -> int:
               f"fill {spent}/{cap} ({spent / cap if cap else 0:.0%}), "
               f"{st['prefill_chunks']} prefill chunks "
               f"({engine.chunk_compilations()} chunk compilations)")
+    if engine.speculate:
+        st = engine.spec_stats
+        rate = st["accepted"] / st["proposed"] if st["proposed"] else 0.0
+        per_round = st["emitted"] / st["rounds"] if st["rounds"] else 0.0
+        print(f"speculative decoding: k={engine.speculate} "
+              f"({args.spec_source}), {st['rounds']} verify rounds, "
+              f"accepted {st['accepted']}/{st['proposed']} drafts "
+              f"({rate:.0%}), {per_round:.2f} tokens/round")
     if engine.prefix is not None:
         hits = int(metrics.counter(METRIC_SERVE_PREFIX_HITS).value())
         misses = int(metrics.counter(METRIC_SERVE_PREFIX_MISSES).value())

@@ -336,6 +336,61 @@ def attention_prefill_paged(p: dict, x: jax.Array, cache: dict,
     return out_proj(p, constrain(o, "heads")), {"k": k, "v": v}
 
 
+def attention_verify(p: dict, x: jax.Array, cache: dict, pos0: jax.Array,
+                     pages: jax.Array, offs: jax.Array,
+                     page_table: jax.Array, cfg: ModelConfig):
+    """Multi-position decode against a paged KV pool (speculative verify).
+
+    x: (B, S, d) hidden states of S consecutive tokens per slot — the
+    slot's last sampled token followed by S-1 drafted continuations, at
+    absolute positions ``pos0 + [0, S)``; cache k/v: (num_pages,
+    page_size, K, Dh) — the shared pool; pages/offs: (B, S) int32
+    physical scatter targets for each token's KV line (the null page for
+    lines past a slot's allocation or for dead slots); page_table:
+    (B, pages_per_seq) as in :func:`attention_decode_paged`.
+
+    Query row j is EXACTLY the one-token decode at position ``pos0 + j``:
+    all S lines scatter first, then each row gathers the pool through
+    the page table and masks ``arange <= pos0 + j`` — the same valid
+    mask, scale, einsum strings, and cast points as
+    :func:`attention_decode_paged`, so row j's output is bit-identical
+    to a sequential decode that had written lines ``pos0..pos0+j``.
+    Rejected drafts' lines are dead on arrival: the accept mask
+    truncates ``pos`` host-side, and the next round's scatter overwrites
+    them before any query can attend past its own position.
+
+    Returns (out (B,S,d), updated cache).
+    """
+    assert cfg.sliding_window is None, "paged KV is full-attention only"
+    B, S, _ = x.shape
+    ps = cache["k"].shape[1]
+    q, k, v = qkv_proj(p, x, cfg)                     # (B,S,H/K,Dh)
+    posm = pos0[:, None].astype(jnp.int32) + jnp.arange(S)[None, :]
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, posm, cfg.rope_theta)
+        k = apply_rope(k, posm, cfg.rope_theta)
+    # scatter all S lines; duplicate writes only ever target the null
+    # page (dead slots / over-capacity lines), same as bucket pad lines
+    ck = cache["k"].at[pages, offs].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[pages, offs].set(v.astype(cache["v"].dtype))
+
+    H, Dh = q.shape[2], q.shape[3]
+    K = ck.shape[2]
+    G = H // K
+    n_pages = page_table.shape[1]
+    L = n_pages * ps
+    qg = q.reshape(B, S, K, G, Dh)
+    kd = ck[page_table].reshape(B, L, K, Dh)
+    vd = cv[page_table].reshape(B, L, K, Dh)
+    valid = jnp.arange(L)[None, None, :] <= posm[:, :, None]   # (B,S,L)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kd).astype(jnp.float32)
+    logits = logits * (Dh ** -0.5)
+    logits = jnp.where(valid[:, None, None], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, vd).reshape(B, S, H, Dh)
+    return out_proj(p, constrain(o, "heads")), {"k": ck, "v": cv}
+
+
 def attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
                      cfg: ModelConfig, use_pallas: bool = False):
     """One-token decode.  x: (B,1,d); cache k/v: (B, slots, K, Dh);

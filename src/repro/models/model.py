@@ -482,6 +482,78 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig, run: RunConfig,
     return logits, {"layers": list(new_layers)}
 
 
+def verify_tokens(params, cache, tokens, pos0, pages, offs, page_table,
+                  cfg: ModelConfig, run: RunConfig):
+    """Score S = k+1 tokens per slot in ONE dispatch (speculative
+    draft-and-verify).
+
+    tokens: (B, S) int32 — ``tokens[:, 0]`` is the slot's last sampled
+    token (its KV line is written now, exactly where the next decode
+    step would have written it) and ``tokens[:, 1:]`` are the k drafted
+    continuations; pos0: (B,) int32 absolute position of ``tokens[:,
+    0]``; pages/offs: (B, S) per-line physical scatter targets (null
+    page beyond a slot's allocation / for dead slots); page_table as in
+    :func:`decode_step`.
+
+    ``logits[:, j]`` predicts position ``pos0 + j + 1``, so comparing
+    ``argmax(logits[:, j])`` against ``tokens[:, j + 1]`` decides
+    acceptance of draft j: the longest agreeing run under greedy, or a
+    rejection-sampling walk under temperature.  Each row's math is the
+    paged decode step's bit for bit (see
+    :func:`repro.models.attention.attention_verify`), so greedy
+    speculation is bit-identical to sequential decode.
+
+    Returns (logits (B, S, V), new cache).  Full-attention configs only
+    (paging already gates SSM/ring out).
+    """
+    P = group_period(cfg)
+    sched = layer_schedule(cfg)[:P]
+    assert all(mixer == "attn" for mixer, _ in sched), \
+        "speculative verify is full-attention only"
+    h = embed_tokens(params, tokens, cfg)
+    if cfg.pos_embedding == "sinusoidal":
+        S = tokens.shape[1]
+        posm = pos0[:, None] + jnp.arange(S)[None, :]
+        pe = A.sinusoidal_pe(posm, cfg.d_model)            # (B,S,d)
+        h = h + pe.astype(h.dtype)
+    h = constrain(h, "hidden")
+
+    def group_body(x, inp):
+        group_params, group_cache = inp
+        new_caches = []
+        for i, (_mixer, ffn) in enumerate(sched):
+            p = group_params[i]
+            hh = rmsnorm(x, p["norm1"]["scale"], cfg.norm_eps)
+            hh, c = A.attention_verify(p["attn"], hh, group_cache[i],
+                                       pos0, pages, offs, page_table, cfg)
+            x = constrain(x + hh, "hidden")
+            if ffn != "none":
+                hh = rmsnorm(x, p["norm2"]["scale"], cfg.norm_eps)
+                if ffn == "moe":
+                    hh, _ = MOE.moe_apply(p["moe"], hh, cfg)
+                else:
+                    hh = mlp_apply(p["mlp"], hh, cfg.mlp_type)
+                x = constrain(x + hh, "hidden")
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if run.unroll:
+        n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+        per_group = []
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda l: l[g], tuple(params["layers"]))
+            gc = jax.tree.map(lambda l: l[g], tuple(cache["layers"]))
+            h, c = group_body(h, (gp, gc))
+            per_group.append(c)
+        new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    else:
+        h, new_layers = jax.lax.scan(
+            group_body, h, (tuple(params["layers"]), tuple(cache["layers"])))
+    h = rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params, h, cfg)
+    return logits, {"layers": list(new_layers)}
+
+
 # ------------------------------------------------- fused decode fast path ----
 
 #: token emitted by finished slots inside a decode_n chunk (host drops them)

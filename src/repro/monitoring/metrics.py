@@ -61,6 +61,14 @@ METRIC_SERVE_PREFIX_REUSED_TOKENS = "serve_prefix_reused_tokens"
 #: cached prefix pages LRU-evicted back to the free pool under pressure
 METRIC_SERVE_PREFIX_EVICTIONS = "serve_prefix_evicted_pages"
 
+# Speculative decoding (draft-and-verify inside the fused chunk).
+#: draft tokens proposed to the verifier
+METRIC_SPEC_PROPOSED = "serve_spec_proposed_total"
+#: draft tokens the target model accepted
+METRIC_SPEC_ACCEPTED = "serve_spec_accepted_total"
+#: running acceptance rate (accepted / proposed), a gauge
+METRIC_SPEC_ACCEPT_RATE = "serve_spec_acceptance_rate"
+
 
 def _labels_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))

@@ -48,6 +48,22 @@ class AccountTree:
         assert account in self.accounts, f"unknown account {account!r}"
         self.user_account[user] = account
 
+    def add_user_association(self, user: str, account: str,
+                             shares: int = 1) -> Account:
+        """Two-level ``tenant/user`` association (idempotent): a leaf
+        account named ``<account>/<user>`` parented under ``account``,
+        with the user bound to it.  Charges landed on the leaf propagate
+        to the tenant and root like any other subtree, so sibling users
+        fair-share *within* their tenant's slice and ``sshare`` renders
+        the nesting with no special casing."""
+        assert account in self.accounts, f"unknown account {account!r}"
+        leaf = f"{account}/{user}"
+        acct = self.accounts.get(leaf)
+        if acct is None:
+            acct = self.add_account(leaf, parent=account, shares=shares)
+        self.user_account.setdefault(user, leaf)
+        return acct
+
     def modify_account(self, name: str, shares: Optional[int] = None,
                        parent: Optional[str] = None,
                        description: Optional[str] = None) -> Account:

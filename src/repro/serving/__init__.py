@@ -8,10 +8,16 @@ from repro.serving.serve_step import (
     make_chunked_serve_step, make_fused_serve_step, make_serve_step,
     serve_step_lowering_args,
 )
+from repro.serving.spec import (
+    ModelDraftSource, NgramDraftSource, NgramIndex, draft_config,
+    greedy_accept, rejection_sample,
+)
 
-__all__ = ["AdmissionController", "DecodeEngine", "PrefixCache",
+__all__ = ["AdmissionController", "DecodeEngine", "ModelDraftSource",
+           "NgramDraftSource", "NgramIndex", "PrefixCache",
            "RadixNode", "Request", "SERVING_TRES_WEIGHTS", "Tenant",
-           "chunked_serve_step_lowering_args",
-           "fused_serve_step_lowering_args", "make_chunked_serve_step",
-           "make_fused_serve_step", "make_serve_step",
+           "chunked_serve_step_lowering_args", "draft_config",
+           "fused_serve_step_lowering_args", "greedy_accept",
+           "make_chunked_serve_step", "make_fused_serve_step",
+           "make_serve_step", "rejection_sample",
            "serve_step_lowering_args"]

@@ -149,11 +149,25 @@ class AdmissionController:
         qos = self.qos_table.get(req.qos)
         return (-(qos.priority if qos else 0), req._seq)
 
+    def account_for(self, req) -> str:
+        """The ledger account a request bills: its ``tenant/user`` leaf
+        association when the request carries a user, else the tenant
+        itself.  Leaf charges propagate up the subtree, so the tenant's
+        standing still reflects all of its users."""
+        user = getattr(req, "user", "")
+        return f"{req.tenant}/{user}" if user else req.tenant
+
     def submit(self, req):
         """Enqueue a request on its tenant's queue — (QOS priority,
         arrival) ordered — auto-registering an unknown tenant with 1
-        share, like the scheduler's lenient auto-association."""
+        share, like the scheduler's lenient auto-association.  A request
+        with a ``user`` additionally auto-registers its ``tenant/user``
+        leaf association (idempotent), so per-user fair-share needs no
+        pre-provisioning."""
         t = self.add_tenant(req.tenant)
+        user = getattr(req, "user", "")
+        if user:
+            self.tree.add_user_association(user, req.tenant)
         req._seq = next(self._seq)
         bisect.insort(t.queue, req, key=self._order_key)
         self._trace_enqueue(req)
@@ -224,10 +238,14 @@ class AdmissionController:
 
     def _priority(self, tenant: Tenant) -> float:
         """The serving multifactor: fair-share + QOS, same weights and the
-        same ``2^(-usage/shares)`` factor the batch scheduler uses."""
+        same ``2^(-usage/shares)`` factor the batch scheduler uses.  The
+        fair-share factor is the head request's LEAF association — its
+        ``tenant/user`` sub-account when it has one — so two users of
+        the same tenant fair-share against each other, not just against
+        other tenants."""
         head = tenant.queue[0]
         return (self.weights.fairshare
-                * self.tree.fair_share_factor(tenant.name)
+                * self.tree.fair_share_factor(self.account_for(head))
                 + self.weights.qos * self._qos_factor(head.qos))
 
     def _over_cap(self, tenant: Tenant, req) -> bool:
@@ -365,7 +383,7 @@ class AdmissionController:
         self.tree.tick()
         qos = self.qos_table.get(req.qos)
         return self.tree.charge_tres(
-            req.tenant,
+            self.account_for(req),
             {"tokens": float(tokens), "gres/kv_token": float(kv_tokens),
              "gres/kv_page": float(kv_pages)},
             usage_factor=qos.usage_factor if qos else 1.0)
@@ -382,16 +400,17 @@ class AdmissionController:
         for entry in charges:
             req, tokens, kv_tokens = entry[0], entry[1], entry[2]
             kv_pages = entry[3] if len(entry) > 3 else 0
-            acc = grouped.setdefault((req.tenant, req.qos), [0.0, 0.0, 0.0])
+            acc = grouped.setdefault((self.account_for(req), req.qos),
+                                     [0.0, 0.0, 0.0])
             acc[0] += tokens
             acc[1] += kv_tokens
             acc[2] += kv_pages
         total = 0.0
-        for (tenant, qos_name), (tokens, kv_tokens, kv_pages) in \
+        for (account, qos_name), (tokens, kv_tokens, kv_pages) in \
                 grouped.items():
             qos = self.qos_table.get(qos_name)
             total += self.tree.charge_tres(
-                tenant,
+                account,
                 {"tokens": tokens, "gres/kv_token": kv_tokens,
                  "gres/kv_page": kv_pages},
                 usage_factor=qos.usage_factor if qos else 1.0)

@@ -98,7 +98,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import init_cache, prefill
 from repro.models.model import (
-    decode_n, decode_step, prefill_chunk, prefill_suffix,
+    decode_n, decode_step, prefill_chunk, prefill_suffix, verify_tokens,
 )
 from repro.models.paging import (
     NULL_PAGE, PageAllocator, PagedKVConfig, pages_for,
@@ -108,12 +108,16 @@ from repro.monitoring.metrics import (
     METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_PREFIX_EVICTIONS,
     METRIC_SERVE_PREFIX_HITS, METRIC_SERVE_PREFIX_MISSES,
     METRIC_SERVE_PREFIX_REUSED_TOKENS, METRIC_SERVE_TENANT_ADMITTED,
-    METRIC_SERVE_TENANT_TOKENS,
+    METRIC_SERVE_TENANT_TOKENS, METRIC_SPEC_ACCEPT_RATE,
+    METRIC_SPEC_ACCEPTED, METRIC_SPEC_PROPOSED,
 )
 from repro.serving.admission import (
     SERVING_TRES_WEIGHTS, AdmissionController,
 )
 from repro.serving.prefix import PrefixCache
+from repro.serving.spec import (
+    ModelDraftSource, NgramDraftSource, draft_config, rejection_sample,
+)
 
 
 @dataclass
@@ -125,6 +129,7 @@ class Request:
     temperature: float = 0.0           # 0 => greedy
     tenant: str = "default"            # account in the shared ledger
     qos: str = "normal"                # service tier (see repro.policy.qos)
+    user: str = ""                     # optional tenant/user leaf association
     # filled by the engine
     output: list = field(default_factory=list)
     done: bool = False
@@ -184,7 +189,11 @@ class DecodeEngine:
                  kv_pages: Optional[int] = None,
                  prefix_cache: bool = False,
                  max_batch_tokens: Optional[int] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 speculate: int = 0,
+                 spec_source: str = "ngram",
+                 draft_model: Optional[ModelConfig] = None,
+                 index_generated: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.run = run or RunConfig(remat="none")
@@ -280,6 +289,50 @@ class DecodeEngine:
                                else self._build_decode_n(1))
             self._chunk_fn = self._build_chunk_prefill()
             self._mixed_step = self._build_mixed_step()
+        # ---- speculative decoding (draft-and-verify in the chunk) ----
+        self.speculate = int(speculate)
+        self.spec = None
+        self._verify_fn = None
+        self._mixed_verify = None
+        #: per-round speculation counters behind sdiag's speculation
+        #: section (rounds = verify dispatches; accepted counts draft
+        #: tokens the target agreed with, excluding correction/bonus)
+        self.spec_stats = {"rounds": 0, "proposed": 0, "accepted": 0,
+                           "emitted": 0, "proposed_by": {}}
+        self._spec_rng = np.random.default_rng(seed)
+        if self.speculate:
+            if self.paging is None:
+                raise ValueError(
+                    "speculate: draft-and-verify writes each proposal's "
+                    "KV line through per-line (page, offset) scatter "
+                    "targets and relies on rejected lines dying on the "
+                    "null page — pass kv_page_size > 0 (CLI: --speculate "
+                    "implies --kv-paging)")
+            if not fused:
+                raise ValueError(
+                    "speculate: verification is one batched dispatch "
+                    "over the fused decode lanes, which needs fused=True")
+            if spec_source == "model":
+                dcfg = draft_model if draft_model is not None \
+                    else draft_config(cfg)
+                self.spec = ModelDraftSource(dcfg, num_slots, cache_len,
+                                             seed=seed, run=self.run)
+            elif spec_source == "ngram":
+                self.spec = NgramDraftSource()
+            else:
+                raise ValueError(f"unknown spec_source {spec_source!r} "
+                                 "(expected 'ngram' or 'model')")
+            self._verify_fn = self._build_verify()
+            if self.max_batch_tokens is not None:
+                self._mixed_verify = self._build_mixed_verify()
+        #: index finished requests' complete generated-token pages into
+        #: the radix trie (cross-request reuse of generated tokens).
+        #: Defaults on exactly when speculation can mine them, so
+        #: non-speculative engines keep pool accounting bit-identical.
+        if index_generated is None:
+            index_generated = bool(self.speculate) \
+                and self.prefix is not None
+        self.index_generated = bool(index_generated)
 
     def _resolve_paging(self, kv_page_size: int,
                         kv_pages: Optional[int]) -> Optional[PagedKVConfig]:
@@ -494,6 +547,50 @@ class DecodeEngine:
                            eos, temps, key, cfg, run, num_tokens,
                            cache_len, page_table=page_table, limit=limit)
             return out + (c_logits,)
+
+        return mixed
+
+    def _build_verify(self):
+        """Jitted speculative verification: score ``last_tok`` plus up to
+        ``speculate`` drafts per lane in ONE dispatch.  Row ``j``'s
+        logits are bitwise-identical to a sequential ``decode_step`` at
+        position ``pos0+j``, so the device argmax returned here IS the
+        greedy token stream — accepting the longest agreeing run keeps
+        greedy output bit-identical to non-speculative decode.  Raw
+        logits ride along for temperature-mode rejection sampling."""
+        cfg, run = self.cfg, self.run
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def verify(params, cache, tokens, pos0, pages, offs, page_table):
+            logits, cache = verify_tokens(params, cache, tokens, pos0,
+                                          pages, offs, page_table, cfg,
+                                          run)
+            return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                    logits, cache)
+
+        return verify
+
+    def _build_mixed_verify(self):
+        """Budgeted serve step with speculation: one dispatch running a
+        prefill chunk (compute + line scatter) and the speculative verify
+        over every live lane — same fusion (and same disjoint-pages
+        argument) as ``_build_mixed_step``, with verify in the decode
+        role."""
+        cfg, run = self.cfg, self.run
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def mixed(params, cache, tokens, pos0, pages, offs, page_table,
+                  c_tokens, c_row, c_start, c_last, c_pages, c_offs):
+            c_logits, c_slices = prefill_chunk(
+                params, {"tokens": c_tokens}, cache, c_row, c_start, cfg,
+                run, last_pos=c_last)
+            cache = DecodeEngine._scatter_chunk(
+                cache, c_slices, c_pages, c_offs)
+            logits, cache = verify_tokens(params, cache, tokens, pos0,
+                                          pages, offs, page_table, cfg,
+                                          run)
+            return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                    logits, cache, c_logits)
 
         return mixed
 
@@ -862,6 +959,10 @@ class DecodeEngine:
         self.pos[slot] = len(toks)
         self.last_tok[slot] = tok
         self.remaining[slot] = req.max_new_tokens - len(req.output)
+        if self.spec is not None:
+            # full context incl. the pending last token (resume-safe:
+            # toks is prompt+output[:-1], tok the re-decoding last)
+            self.spec.begin(slot, np.append(toks, np.int32(tok)))
         # the prefilled KV residency the tenant pays for: dense lines, or
         # (paged) the pages actually pinned — amortized across holders
         # when the prefix cache shares them
@@ -950,6 +1051,8 @@ class DecodeEngine:
         request's slot tag)."""
         slot = victim._slot
         assert slot >= 0 and self.slots[slot] is victim, (slot, victim.rid)
+        if self.spec is not None:
+            self.spec.release(slot)
         self.slots[slot] = None
         victim._slot = -1
         self._release_pages(slot, victim)
@@ -977,6 +1080,18 @@ class DecodeEngine:
     def _finish(self, slot: int):
         req = self.slots[slot]
         req.done = True
+        if self.spec is not None or self.index_generated:
+            seq = np.concatenate([np.asarray(req.prompt, np.int32),
+                                  np.asarray(req.output, np.int32)])
+            if self.spec is not None:
+                self.spec.release(slot)
+                self.spec.observe(seq)
+            if self.index_generated and self.prefix is not None:
+                # KV lines exist for every token but the last (its line
+                # would have been written by the next decode), so index
+                # seq[:-1]; pages past the prompt carry generated tokens
+                self.prefix.insert(seq[:-1], self._slot_pages[slot],
+                                   generated_from=len(req.prompt))
         self.slots[slot] = None
         req._slot = -1
         self._release_pages(slot, req)
@@ -1282,6 +1397,8 @@ class DecodeEngine:
         self.pos[slot] = len(part.toks)
         self.last_tok[slot] = tok
         self.remaining[slot] = req.max_new_tokens - len(req.output)
+        if self.spec is not None:
+            self.spec.begin(slot, np.append(part.toks, np.int32(tok)))
         self.admission.charge(req, kv_pages=self._billed_pages(slot))
         self.metrics.counter("serve_requests_admitted").inc()
         self.metrics.counter(
@@ -1355,16 +1472,21 @@ class DecodeEngine:
         T = self.max_batch_tokens
         decode_active = self._decode_active()
         d = self.decode_chunk
+        # speculative lanes cost k+1 budget tokens each (worst case: all
+        # drafts accepted plus the bonus); if that starves pending
+        # prefills entirely, drop to the plain 1-token lane mix instead
+        spec = self.speculate > 0
+        lane = (self.speculate + 1) if spec else d
         if (self._partials and decode_active
-                and self.decode_chunk * len(decode_active) > T):
-            d = 1
+                and lane * len(decode_active) > T):
+            d, spec, lane = 1, False, 1
         if decode_active:
-            self._ensure_pages(decode_active, steps=d)
+            self._ensure_pages(decode_active, steps=lane)
             decode_active = self._decode_active()
         budget = T
         head_plan = None
         if self._partials and decode_active:
-            budget -= d * len(decode_active)
+            budget -= lane * len(decode_active)
             for part in self._pack_order():
                 if budget < 1:
                     break
@@ -1377,7 +1499,13 @@ class DecodeEngine:
             # planning may have reclaim-evicted a decode slot
             decode_active = self._decode_active()
         if decode_active:
-            if head_plan is not None and d == self.decode_chunk:
+            if spec:
+                total, chunk_out = self._step_spec(decode_active,
+                                                   chunk_plan=head_plan)
+                st["decode_tokens"] += total
+                if head_plan is not None:
+                    self._finish_chunk(head_plan, chunk_out)
+            elif head_plan is not None and d == self.decode_chunk:
                 total, chunk_out = self._step_fused(
                     decode_active, num_tokens=d, chunk_plan=head_plan)
                 st["decode_tokens"] += total
@@ -1434,14 +1562,21 @@ class DecodeEngine:
             return self._step_budgeted()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if self.paging is not None and active:
-            self._ensure_pages(active)
+            # speculative rounds may advance a lane by up to k+1 AND fall
+            # back to the plain fused chunk when no lane has drafts —
+            # pre-grow pages for whichever path runs
+            self._ensure_pages(
+                active, steps=(max(self.decode_chunk, self.speculate + 1)
+                               if self.speculate else None))
             # growth may have evicted/requeued slots at ANY index (a
             # reclaim victim can precede its requester) — rebuild rather
             # than trust the in-place edits
             active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return self.admission.pending()
-        if self.fused:
+        if self.speculate:
+            self._step_spec(active)
+        elif self.fused:
             self._step_fused(active)
         else:
             self._step_host(active)
@@ -1558,6 +1693,10 @@ class DecodeEngine:
             self.pos[i] = pos[i]
             self.last_tok[i] = token[i]
             self.remaining[i] = remaining[i]
+            if self.spec is not None and n_gen:
+                # keep draft contexts in sync when this chunk ran as the
+                # empty-draft fallback of the speculative step
+                self.spec.advance(i, toks[i, :n_gen].astype(np.int32))
             if done_d[i]:
                 hit_eos = (req.eos_id is not None and req.output
                            and req.output[-1] == req.eos_id)
@@ -1577,6 +1716,188 @@ class DecodeEngine:
             METRIC_SERVE_TENANT_TOKENS, "generated tokens per tenant")
         for tenant, n in tenant_tokens.items():
             tok_counter.inc(n, tenant=tenant)
+        return total, chunk_out
+
+    def _step_spec(self, active: list,
+                   chunk_plan: Optional[_ChunkPlan] = None):
+        """One speculative draft-and-verify round (paged + fused only).
+
+        Per live lane the draft source proposes up to ``speculate``
+        tokens; ONE batched verify dispatch scores ``last_tok`` plus all
+        drafts (row ``j``'s logits bitwise-identical to a sequential
+        decode at ``pos+j``), then the host accepts the longest agreeing
+        run under greedy — or rejection-samples under temperature — and
+        replays ``decode_n``'s exact stop walk over the emitted run
+        (EOS / budget / allocation boundary), so stopping is
+        bit-identical too.  Rejected proposals' KV lines are dead on
+        arrival: masked until the next round's scatter overwrites them
+        (pos only advances past ACCEPTED lines), the same null-page
+        lifetime argument bucket pad lines ride on.
+
+        When no lane has any draft, falls back to the plain fused chunk
+        (classic mode) or a 1-token lane mix (budgeted mode) — identical
+        output either way, but no S-row dispatch for 1-token progress.
+        Returns ``(generated_tokens, chunk_outputs_or_None)`` like
+        ``_step_fused``."""
+        k = self.speculate
+        S = k + 1
+        ps = self.paging.page_size
+        drafts: dict[int, np.ndarray] = {}
+        kinds: dict[int, str] = {}
+        for i in active:
+            d = np.asarray(self.spec.draft(i, k), np.int32).ravel()[:k]
+            kinds[i] = getattr(self.spec, "last_kind", self.spec.kind)
+            # drop drafts the lane has no room to verify: every USED
+            # verify row must read only lines inside the allocation
+            room = self._capacity(i) - 1 - int(self.pos[i])
+            if len(d) > room:
+                d = d[:max(room, 0)]
+            drafts[i] = d
+        if chunk_plan is None and all(len(drafts[i]) == 0 for i in active):
+            if self.max_batch_tokens is not None:
+                return self._step_fused(active, num_tokens=1)
+            return self._step_fused(active)
+        st = self.spec_stats
+        proposed = sum(len(drafts[i]) for i in active)
+        tokens = np.zeros((self.num_slots, S), np.int32)
+        pos0 = np.zeros(self.num_slots, np.int32)
+        pages = np.full((self.num_slots, S), NULL_PAGE, np.int32)
+        offs = np.zeros((self.num_slots, S), np.int32)
+        for i in active:
+            p0 = int(self.pos[i])
+            di = drafts[i]
+            tokens[i, 0] = self.last_tok[i]
+            tokens[i, 1:1 + len(di)] = di
+            pos0[i] = p0
+            sp = self._slot_pages[i]
+            cap = len(sp) * ps
+            for j in range(S):
+                if p0 + j < cap:
+                    pages[i, j] = sp[(p0 + j) // ps]
+                    offs[i, j] = (p0 + j) % ps
+            # columns past the allocation (and every column of frozen /
+            # empty / mid-prefill lanes) scatter to the null page
+        any_temp = any(self.slots[i].temperature > 0 for i in active)
+        tr = self.tracer
+        csp = tr.begin("SPECULATE", cat="engine",
+                       track=("serving:engine", "dispatch"),
+                       active=len(active), k=k,
+                       proposed=proposed) if tr is not None else None
+        t0 = time.perf_counter()
+        chunk_out = None
+        args = (self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos0), jnp.asarray(pages), jnp.asarray(offs),
+                jnp.asarray(self.page_tables))
+        if chunk_plan is not None:
+            greedy, logits, self.cache, chunk_out = self._mixed_verify(
+                *args,
+                jnp.asarray(chunk_plan.tokens)[None],
+                jnp.asarray(chunk_plan.row)[None],
+                jnp.asarray(chunk_plan.start, jnp.int32),
+                jnp.asarray(chunk_plan.real - 1, jnp.int32),
+                jnp.asarray(chunk_plan.pages),
+                jnp.asarray(chunk_plan.offs))
+        else:
+            greedy, logits, self.cache = self._verify_fn(*args)
+        # ONE host sync per round; raw logits transfer only under
+        # temperature (greedy needs just the device argmax)
+        greedy = np.asarray(greedy)
+        logits_np = (np.asarray(logits).astype(np.float32)
+                     if any_temp else None)
+        self.metrics.histogram("serve_decode_seconds",
+                               "batched decode-step latency").observe(
+            time.perf_counter() - t0)
+        ts_sync = tr.clock() if tr is not None else 0.0
+        charges = []
+        tenant_tokens: dict[str, int] = {}
+        total = 0
+        accepted_total = 0
+        for i in active:
+            req = self.slots[i]
+            di = drafts[i]
+            nd = len(di)
+            if req.temperature > 0:
+                t = max(req.temperature, 1e-4)
+                rows = logits_np[i, :nd + 1] / t
+                rows = rows - rows.max(axis=-1, keepdims=True)
+                p = np.exp(rows)
+                p /= p.sum(axis=-1, keepdims=True)
+                cand = rejection_sample(self._spec_rng, p, di)
+            else:
+                tg = greedy[i]
+                m = 0
+                while m < nd and tg[m] == di[m]:
+                    m += 1
+                cand = tg[:m + 1]
+            accepted_total += len(cand) - 1
+            st["proposed_by"][kinds[i]] = \
+                st["proposed_by"].get(kinds[i], 0) + nd
+            # decode_n's stop walk, host-side: emit the token, then
+            # freeze on EOS / remaining / allocation boundary
+            boundary = self._capacity(i) - 1
+            p0 = int(self.pos[i])
+            rem = int(self.remaining[i])
+            emitted = []
+            stopped = False
+            for tkn in cand:
+                emitted.append(int(tkn))
+                rem -= 1
+                if ((req.eos_id is not None
+                     and emitted[-1] == req.eos_id) or rem <= 0
+                        or p0 + len(emitted) >= boundary):
+                    stopped = True
+                    break
+            n_gen = len(emitted)
+            req.output.extend(emitted)
+            charges.append(
+                (req, n_gen, 0, self._billed_pages(i) * n_gen))
+            tenant_tokens[req.tenant] = \
+                tenant_tokens.get(req.tenant, 0) + n_gen
+            total += n_gen
+            if tr is not None:
+                if req._t_last is not None:
+                    tr.slo.itl((ts_sync - req._t_last) / n_gen,
+                               req.tenant, req.qos, n=n_gen)
+                req._t_last = ts_sync
+            self.pos[i] = p0 + n_gen
+            self.last_tok[i] = emitted[-1]
+            self.remaining[i] = rem
+            self.spec.advance(i, np.asarray(emitted, np.int32))
+            if n_gen == k + 1 and hasattr(self.spec, "set_pending"):
+                # fully-accepted round: the model draft's k-step scan
+                # never wrote draft k-1's own KV line — catch up later
+                self.spec.set_pending(i, int(di[k - 1]))
+            if stopped:
+                hit_eos = (req.eos_id is not None and req.output
+                           and req.output[-1] == req.eos_id)
+                if (not hit_eos and self.remaining[i] > 0
+                        and self._capacity(i) < self.cache_len):
+                    # froze at its allocation boundary, not a real stop
+                    self._requeue_starved(i)
+                else:
+                    self._finish(i)
+        if csp is not None:
+            tr.end(csp, ts=ts_sync, tokens=total, accepted=accepted_total)
+        self.admission.charge_bulk(charges)
+        self.metrics.counter("serve_tokens_generated").inc(total)
+        tok_counter = self.metrics.counter(
+            METRIC_SERVE_TENANT_TOKENS, "generated tokens per tenant")
+        for tenant, n in tenant_tokens.items():
+            tok_counter.inc(n, tenant=tenant)
+        st["rounds"] += 1
+        st["proposed"] += proposed
+        st["accepted"] += accepted_total
+        st["emitted"] += total
+        self.metrics.counter(
+            METRIC_SPEC_PROPOSED, "draft tokens proposed").inc(proposed)
+        self.metrics.counter(
+            METRIC_SPEC_ACCEPTED,
+            "draft tokens accepted by the target").inc(accepted_total)
+        if st["proposed"]:
+            self.metrics.gauge(
+                METRIC_SPEC_ACCEPT_RATE,
+                "running draft acceptance rate").set(
+                st["accepted"] / st["proposed"])
         return total, chunk_out
 
     def _step_host(self, active: list):

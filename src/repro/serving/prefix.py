@@ -43,15 +43,21 @@ from repro.models.paging import NULL_PAGE, PageAllocator
 
 class RadixNode:
     """One cached page: ``page_size`` prompt tokens at depth-implied
-    positions, backed by physical ``page``."""
-    __slots__ = ("block", "page", "parent", "children", "last_used")
+    positions, backed by physical ``page``.  ``generated`` marks a page
+    whose tokens include model *output* (indexed at request finish
+    rather than admission) — lifetime and sharing are identical, the
+    flag only feeds the prompt/generated hit split."""
+    __slots__ = ("block", "page", "parent", "children", "last_used",
+                 "generated")
 
-    def __init__(self, block: tuple, page: int, parent):
+    def __init__(self, block: tuple, page: int, parent,
+                 generated: bool = False):
         self.block = block
         self.page = page
         self.parent = parent
         self.children: dict = {}
         self.last_used = 0
+        self.generated = generated
 
 
 class PrefixCache:
@@ -63,6 +69,8 @@ class PrefixCache:
         self.page_size = page_size
         self.root = RadixNode((), NULL_PAGE, None)
         self.nodes = 0                  # cached pages currently indexed
+        self.prompt_hits = 0            # acquired pages by provenance
+        self.generated_hits = 0
         self._clock = itertools.count(1)
 
     # ------------------------------------------------------------- match ----
@@ -94,17 +102,23 @@ class PrefixCache:
         for n in nodes:
             n.last_used = now
             pages.append(n.page)
+            if n.generated:
+                self.generated_hits += 1
+            else:
+                self.prompt_hits += 1
         self.allocator.ref(pages)
         return pages
 
     # ------------------------------------------------------------ insert ----
-    def insert(self, tokens, pages) -> int:
+    def insert(self, tokens, pages, generated_from=None) -> int:
         """Register the complete-page blocks of ``tokens`` (physical
         ``pages``, logical order).  Blocks already indexed — a request's
         matched chain, or a concurrent twin's insert — are kept as-is
         (first wins); each newly indexed page takes an index-owned
-        allocator reference so it outlives the request.  Returns the
-        number of nodes added."""
+        allocator reference so it outlives the request.  A node whose
+        block extends past token index ``generated_from`` (the prompt
+        length, when inserting a finished request's full sequence) is
+        flagged ``generated``.  Returns the number of nodes added."""
         n_total = min(len(tokens) // self.page_size, len(pages))
         node, added = self.root, 0
         now = next(self._clock)
@@ -113,7 +127,9 @@ class PrefixCache:
             if child is None:
                 if pages[j] == NULL_PAGE:
                     break
-                child = RadixNode(blk, pages[j], node)
+                gen = (generated_from is not None
+                       and (j + 1) * self.page_size > generated_from)
+                child = RadixNode(blk, pages[j], node, generated=gen)
                 node.children[blk] = child
                 self.allocator.ref([pages[j]])
                 self.nodes += 1

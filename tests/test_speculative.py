@@ -1,0 +1,313 @@
+"""Speculative decoding: draft-and-verify inside the fused chunk.
+
+Greedy bit-identity against plain paged serving for k in {1, 2, 4} and
+across the engine's orthogonal modes (budgeted batching, prefix cache,
+model draft source), EOS mid-accepted-run stopping, starvation-requeue
+round-trips with speculation live, the rejection sampler's
+distribution-preservation (frequency test), the n-gram draft machinery
+(own-context self-match fallback, cross-request index LRU), finished
+requests' generated pages landing in the radix index with a
+prompt/generated hit split, the sdiag speculation section, and per-user
+``tenant/user`` fair-share leaf associations.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.serving import DecodeEngine, Request
+from repro.serving.spec import (
+    ModelDraftSource, NgramDraftSource, NgramIndex, greedy_accept,
+    rejection_sample,
+)
+from repro.serving.spec import _SlotNgrams
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.models import init_params
+    cfg = get_reduced_config("stablelm-3b")
+    return cfg, init_params(cfg, 0)
+
+
+def _repeat_reqs(cfg, n=3, seed=3, **kw):
+    """Repeat-heavy prompts (a base phrase looped) so prompt-lookup
+    drafting has material to match."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        base = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+        out.append(Request(rid=i, prompt=np.concatenate([base] * 3),
+                           max_new_tokens=12 + i, **kw))
+    return out
+
+
+def _run(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    assert all(r.done for r in reqs), [(r.rid, r.done) for r in reqs]
+    return {r.rid: list(r.output) for r in reqs}
+
+
+# ------------------------------------------------------- bit-identity ----
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_spec_greedy_identical(tiny_model, k):
+    """THE speculation contract: greedy output is bit-identical to plain
+    decoding at any draft length — acceptance compares the target's own
+    argmax rows (computed on bitwise-identical logits via verify_tokens)
+    against the drafts, so a wrong draft costs speed, never tokens."""
+    cfg, params = tiny_model
+    ref = _run(DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                            kv_page_size=8), _repeat_reqs(cfg))
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       kv_page_size=8, speculate=k)
+    assert _run(eng, _repeat_reqs(cfg)) == ref
+    st = eng.spec_stats
+    assert st["rounds"] > 0 and st["proposed"] > 0, st
+    assert 0 <= st["accepted"] <= st["proposed"]
+    assert st["proposed_by"].get("ngram", 0) == st["proposed"]
+
+
+def test_spec_identical_under_budgeted_batching(tiny_model):
+    """Speculation composes with continuous batching: decode lanes cost
+    k+1 budget tokens each and verification fuses with the head prefill
+    chunk in one dispatch — outputs still bit-identical."""
+    cfg, params = tiny_model
+    ref = _run(DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                            kv_page_size=8), _repeat_reqs(cfg))
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       kv_page_size=8, speculate=2, max_batch_tokens=16)
+    assert _run(eng, _repeat_reqs(cfg)) == ref
+    assert eng.spec_stats["rounds"] > 0
+
+
+def test_spec_identical_with_prefix_cache_and_generated_pages(tiny_model):
+    """Speculation + radix prefix cache: identical outputs, and finished
+    requests' generated tokens are indexed at FINISH — a later identical
+    request reuses those pages, with the hit split attributing them to
+    generated (not prompt) provenance."""
+    cfg, params = tiny_model
+    ref = _run(DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                            kv_page_size=8), _repeat_reqs(cfg))
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       kv_page_size=8, speculate=2, prefix_cache=True)
+    got = _run(eng, _repeat_reqs(cfg))
+    assert got == ref
+    # resubmit request 0's prompt extended by its own output: the match
+    # now walks into pages indexed from generated tokens
+    seq = np.concatenate([_repeat_reqs(cfg)[0].prompt,
+                          np.asarray(ref[0], np.int32)])
+    tail = Request(rid=9, prompt=seq, max_new_tokens=4)
+    _run(eng, [tail])
+    assert eng.prefix.generated_hits > 0, (
+        eng.prefix.prompt_hits, eng.prefix.generated_hits)
+
+
+def test_spec_identical_with_model_draft_source(tiny_model):
+    """The draft-model source (own dense cache, decode_n scan) keeps the
+    same contract: any disagreement is corrected by the verify row, so
+    even an untrained random draft yields bit-identical output."""
+    cfg, params = tiny_model
+    ref = _run(DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                            kv_page_size=8), _repeat_reqs(cfg))
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       kv_page_size=8, speculate=2, spec_source="model")
+    assert _run(eng, _repeat_reqs(cfg)) == ref
+    assert eng.spec_stats["proposed_by"].get("model", 0) > 0
+
+
+def test_spec_oracle_draft_full_accept(tiny_model):
+    """Oracle draft (the target itself): every proposal accepted, which
+    exercises the full-accept catch-up path — the k-step draft scan never
+    wrote draft k-1's own KV line, so a pending token must be replayed
+    before the next draft — and output stays bit-identical."""
+    cfg, params = tiny_model
+    ref = _run(DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                            kv_page_size=8), _repeat_reqs(cfg))
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       kv_page_size=8, speculate=3, spec_source="model")
+    eng.spec = ModelDraftSource(cfg, eng.num_slots, eng.cache_len,
+                                params=params, run=eng.run)
+    assert _run(eng, _repeat_reqs(cfg)) == ref
+    st = eng.spec_stats
+    assert st["proposed"] > 0 and st["accepted"] == st["proposed"], st
+
+
+def test_spec_eos_mid_accepted_run(tiny_model):
+    """EOS inside an accepted run stops the request THERE: trailing
+    accepted drafts are discarded (decode_n's emit-then-freeze walk,
+    replayed host-side), so output matches non-speculative EOS decoding
+    exactly."""
+    cfg, params = tiny_model
+    plain = _run(DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                              kv_page_size=8), _repeat_reqs(cfg))
+    # pick a token the reference emits mid-stream and make it EOS
+    eos = plain[2][len(plain[2]) // 2]
+    ref = _run(DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                            kv_page_size=8),
+               _repeat_reqs(cfg, eos_id=eos))
+    assert any(len(ref[r]) < len(plain[r]) for r in ref), \
+        "EOS never fired; test is vacuous"
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       kv_page_size=8, speculate=4)
+    assert _run(eng, _repeat_reqs(cfg, eos_id=eos)) == ref
+
+
+def test_spec_starvation_requeue_round_trip(tiny_model):
+    """Page-pool pressure starves a speculating request mid-decode: it
+    requeues (draft state released), resumes via chunked re-prefill (the
+    draft source re-begins with the full context), and the final output
+    still matches an unconstrained non-speculative run."""
+    cfg, params = tiny_model
+    reqs = _repeat_reqs(cfg, n=3)
+    ref = _run(DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                            kv_page_size=8), _repeat_reqs(cfg, n=3))
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       kv_page_size=8, kv_pages=8,  # 7 usable pages
+                       speculate=2)
+    assert _run(eng, reqs) == ref
+    assert eng.metrics.counter("serve_page_starvations").value() >= 1, \
+        "pool never starved; test is vacuous"
+
+
+# ------------------------------------------------------- guards ----
+
+def test_speculate_requires_paging_and_fused(tiny_model):
+    cfg, params = tiny_model
+    with pytest.raises(ValueError, match="kv[-_]paging"):
+        DecodeEngine(cfg, params, num_slots=2, cache_len=64, speculate=2)
+    with pytest.raises(ValueError, match="fused"):
+        DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                     kv_page_size=8, fused=False, speculate=2)
+    with pytest.raises(ValueError, match="spec_source"):
+        DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                     kv_page_size=8, speculate=2, spec_source="psychic")
+
+
+# ------------------------------------------------- acceptance rules ----
+
+def test_greedy_accept_runs():
+    t = np.array([5, 6, 7, 8])
+    assert list(greedy_accept(t, np.array([5, 6, 7]))) == [5, 6, 7, 8]
+    assert list(greedy_accept(t, np.array([5, 9, 7]))) == [5, 6]
+    assert list(greedy_accept(t, np.array([9, 6, 7]))) == [5]
+    assert list(greedy_accept(t[:1], np.array([], np.int32))) == [5]
+
+
+def test_rejection_sample_preserves_distribution():
+    """Frequency test: with point-mass drafts, each emitted position's
+    marginal must be the target row's distribution — acceptance when the
+    draft is likely, residual resampling when it is not."""
+    rng = np.random.default_rng(0)
+    p_accept = np.array([[0.7, 0.2, 0.1]])
+    counts = np.zeros(3)
+    trials = 4000
+    for _ in range(trials):
+        out = rejection_sample(rng, np.vstack([p_accept, p_accept]),
+                               np.array([0]))
+        counts[out[0]] += 1
+    # first emitted token ~ target row regardless of the draft
+    freq = counts / trials
+    assert np.allclose(freq, p_accept[0], atol=0.03), freq
+    # an impossible draft is always rejected, residual renormalized
+    probs = np.array([[0.0, 0.5, 0.5], [1.0, 0.0, 0.0]])
+    outs = {tuple(rejection_sample(rng, probs, np.array([0])))
+            for _ in range(200)}
+    assert all(len(o) == 1 and o[0] in (1, 2) for o in outs), outs
+    # full acceptance emits the bonus token from the final row
+    sure = np.array([[0.0, 1.0, 0.0], [0.0, 0.0, 1.0]])
+    assert list(rejection_sample(rng, sure, np.array([1]))) == [1, 2]
+
+
+# ----------------------------------------------------- n-gram drafts ----
+
+def test_slot_ngrams_self_match_falls_back():
+    """The context tail's gram always matches itself at the end — the
+    lookup must fall back to the *previous* occurrence (or nothing)."""
+    s = _SlotNgrams((3, 2), [1, 2, 3, 9, 1, 2, 3])
+    assert list(s.match(4)) == [9, 1, 2, 3]      # earlier (1,2,3) -> 9...
+    s2 = _SlotNgrams((3, 2), [1, 2, 3])
+    assert s2.match(4) is None                    # only the self-match
+    s.append([9])                                 # now ...3, 9 repeats
+    assert list(s.match(2)) == [1, 2]
+
+
+def test_ngram_index_last_wins_and_evicts():
+    idx = NgramIndex(orders=(2,), max_continuation=4, capacity=3)
+    idx.observe([1, 2, 7, 7, 7])
+    assert list(idx.lookup([0, 1, 2])) == [7, 7, 7]
+    idx.observe([1, 2, 8])                        # same gram, new tail
+    assert list(idx.lookup([1, 2])) == [8]
+    idx.observe([4, 5, 6, 7])                     # capacity 3: oldest out
+    assert len(idx) <= 3
+    assert idx.lookup([9, 9]) is None
+
+
+def test_ngram_source_uses_cross_request_index():
+    src = NgramDraftSource(orders=(2,))
+    src.observe([1, 2, 3, 4, 5])                  # a finished request
+    src.begin(0, [9, 1, 2])                       # new request, no self-rep
+    assert list(src.draft(0, 3)) == [3, 4, 5]
+    src.advance(0, [3, 4])
+    assert list(src.draft(0, 2)) == [5]
+    src.release(0)
+    assert len(src.draft(0, 2)) == 0              # released slot: no drafts
+
+
+# ------------------------------------------------------- surfaces ----
+
+def test_sdiag_speculation_golden():
+    from types import SimpleNamespace
+
+    from repro.cluster import commands
+    eng = SimpleNamespace(
+        max_batch_tokens=None, speculate=4,
+        spec_stats={"rounds": 10, "proposed": 40, "accepted": 30,
+                    "emitted": 40, "proposed_by": {"ngram": 40}})
+    assert commands.sdiag(engine=eng) == "\n".join([
+        "Speculative decoding:",
+        "\tDraft length (k): 4",
+        "\tVerify rounds:    10",
+        "\tProposed:         40 (ngram: 40)",
+        "\tAccepted:         30 (75%)",
+        "\tTokens/round:     4.00",
+    ])
+    # non-speculating engines contribute no section
+    off = SimpleNamespace(max_batch_tokens=None, speculate=0,
+                          spec_stats={})
+    assert commands.sdiag(engine=off) == "sdiag: nothing to report"
+
+
+# ------------------------------------------- per-user fair share ----
+
+def test_per_user_leaf_associations(tiny_model):
+    """Requests carrying a ``user`` bill a ``tenant/user`` leaf account
+    (auto-associated at submit): two users of one tenant fair-share
+    against each other inside the tenant's slice, and the tenant's own
+    standing aggregates both."""
+    cfg, params = tiny_model
+    eng = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                       kv_page_size=8)
+    adm = eng.admission
+    adm.add_tenant("acme", shares=4)
+    reqs = [Request(rid=i, prompt=np.arange(4 + i, dtype=np.int32),
+                    max_new_tokens=4, tenant="acme",
+                    user=("ann" if i % 2 == 0 else "bob"))
+            for i in range(4)]
+    _run(eng, reqs)
+    tree = adm.tree
+    assert tree.accounts["acme/ann"].parent == "acme"
+    assert tree.accounts["acme/bob"].parent == "acme"
+    assert tree.account_of("ann") == "acme/ann"
+    for leaf in ("acme/ann", "acme/bob"):
+        assert tree.usage.get(leaf, 0.0) > 0.0, leaf
+    # leaf charges propagate: the tenant's usage covers both users'
+    assert tree.usage["acme"] >= tree.usage["acme/ann"]
+    assert tree.usage["acme"] >= tree.usage["acme/bob"]
+    # sibling leaves split the tenant's normalized share
+    assert tree.norm_shares("acme/ann") == pytest.approx(
+        tree.norm_shares("acme") / 2)
+    # userless requests on the same tenant still bill the tenant node
+    assert adm.account_for(Request(rid=9, prompt=np.arange(3),
+                                   tenant="acme")) == "acme"
