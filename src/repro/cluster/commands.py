@@ -332,9 +332,11 @@ def sdiag(cluster: Optional[Cluster] = None, tracer=None,
     cluster controller), admission-controller cycle statistics (from the
     serving layer), per-tenant serving SLO percentiles (from the
     tracer's derived histograms), serve-step utilization (from a
-    budgeted DecodeEngine's per-iteration counters), and speculative
-    decoding acceptance (from a speculating engine).  Any subset of
-    sources may be given; sections for absent sources are simply
+    budgeted DecodeEngine's per-iteration counters), speculative
+    decoding acceptance (from a speculating engine), and tensor
+    parallelism (from a mesh-attached engine — shard layout, per-device
+    KV-pool occupancy, cross-shard reductions per token).  Any subset
+    of sources may be given; sections for absent sources are simply
     omitted."""
     sections = []
     if cluster is not None:
@@ -394,6 +396,27 @@ def sdiag(cluster: Optional[Cluster] = None, tracer=None,
             f"\tAccepted:         {st['accepted']} ({rate:.0%})",
             f"\tTokens/round:     {run_len:.2f}",
         ]))
+    if engine is not None and getattr(engine, "tp", None) is not None \
+            and engine.tp.tp > 1:
+        st = engine.tp_stats()
+        ps = st["psums_per_token"]
+        lines = [
+            "Tensor parallelism:",
+            f"\tPlan:             {st['plan']}",
+            f"\tDevices:          {len(st['devices'])}"
+            + (f" ({', '.join(st['devices'])})" if st["devices"] else ""),
+            f"\tPsums/token:      {sum(ps.values())} "
+            f"(attn_out {ps['attn_out']}, mlp_out {ps['mlp_out']})",
+        ]
+        if "kv_pages_in_use" in st:
+            total = st["kv_pages_total"]
+            for k, n in enumerate(st["kv_pages_in_use"]):
+                pct = n / total if total else 0.0
+                lines.append(f"\tKV pool shard {k}:  {n}/{total} pages "
+                             f"({pct:.0%})")
+        for note in st["notices"]:
+            lines.append(f"\tNotice:           {note}")
+        sections.append("\n".join(lines))
     if tracer is not None:
         sections.append("Serving SLO (per tenant/QOS):\n"
                         + tracer.slo.format_report())

@@ -45,3 +45,65 @@ def constrain(x: jax.Array, name: str) -> jax.Array:
     if sh is None:
         return x
     return jax.lax.with_sharding_constraint(x, sh)
+
+
+# ---------------------------------------------------- tensor-parallel psum ----
+#
+# Serving TP runs the model inside ``shard_map`` (the Pallas decode kernels
+# cannot be partitioned by GSPMD), where cross-shard reductions must be
+# written explicitly.  The model code stays mesh-agnostic the same way
+# ``constrain`` keeps it: attention's output projection and the MLP
+# down-projection call ``maybe_psum(x, kind)``, and the engine's step
+# builders install a reduction spec for the trace.  Outside any spec
+# (training, single-device serving) it is the identity.
+
+#: (axis name, psum "attn_out"?, psum "mlp_out"?, counter dict or None)
+_TP_REDUCE: contextvars.ContextVar[Optional[tuple]] = contextvars.ContextVar(
+    "repro_tp_reduce", default=None)
+
+
+@contextlib.contextmanager
+def tp_reduce_scope(axis: str, attn: bool, mlp: bool, counts=None):
+    """Install cross-shard reductions for code traced inside the block.
+
+    ``attn``/``mlp`` gate the two reduction points independently: under
+    the divisibility-fallback policy a dimension that does not divide the
+    mesh axis keeps its params replicated, and a psum there would
+    multiply the (already-complete) partial by the shard count.
+    ``counts`` (optional dict) accumulates ``{"attn_out": n, "mlp_out":
+    m}`` psum insertions during tracing — the sdiag per-shard section
+    reports psums per dispatch from it.
+    """
+    tok = _TP_REDUCE.set((axis, attn, mlp, counts))
+    try:
+        yield
+    finally:
+        _TP_REDUCE.reset(tok)
+
+
+def tp_will_reduce(kind: str) -> bool:
+    """True when :func:`maybe_psum` would reduce at this point.  Call
+    sites use it to keep the partial contraction in float32 through the
+    psum: reducing already-rounded bf16 partials double-rounds, and the
+    extra half-ulp is enough to flip a near-tie greedy argmax vs the
+    single-device contraction (which rounds its f32 accumulator once)."""
+    spec = _TP_REDUCE.get()
+    if spec is None:
+        return False
+    _, attn, mlp, _ = spec
+    return attn if kind == "attn_out" else mlp
+
+
+def maybe_psum(x: jax.Array, kind: str) -> jax.Array:
+    """Cross-shard ``psum`` of a partial sum at a named reduction point
+    (``"attn_out"`` | ``"mlp_out"``); identity outside ``tp_reduce_scope``
+    or when the point's dimension was left replicated."""
+    spec = _TP_REDUCE.get()
+    if spec is None:
+        return x
+    axis, attn, mlp, counts = spec
+    if (kind == "attn_out" and not attn) or (kind == "mlp_out" and not mlp):
+        return x
+    if counts is not None:
+        counts[kind] = counts.get(kind, 0) + 1
+    return jax.lax.psum(x, axis)

@@ -80,6 +80,25 @@ def param_pspec(ps: ParamSpec, mesh: Mesh, strategy: Strategy,
     return P(*spec)
 
 
+def serving_param_pspec(ps: ParamSpec, tp: int, shard_axes,
+                        axis: str = "model") -> P:
+    """PartitionSpec for one parameter under serving tensor parallelism.
+
+    Unlike :func:`param_pspec` (training: TP_AXIS_PRIORITY would
+    vocab-shard the embedding/LM head), serving shards ONLY the logical
+    axes in ``shard_axes`` — heads/kv_heads/ffn per the engine's TP plan
+    — and replicates everything else: the decode engine samples on
+    device from full logits, so every shard must hold the whole
+    vocabulary.  The mesh axis lands on the first matching axis whose
+    size divides ``tp`` (at most one placement per parameter)."""
+    spec: list = [None] * len(ps.shape)
+    for i, (ax, n) in enumerate(zip(ps.axes, ps.shape)):
+        if ax in shard_axes and n % tp == 0:
+            spec[i] = axis
+            break
+    return P(*spec)
+
+
 def param_shardings(cfg: ModelConfig, mesh: Mesh, run: RunConfig):
     """NamedSharding pytree matching the parameter pytree.
 

@@ -27,6 +27,14 @@ Validity is a per-sequence position: the cache holds ``S`` slots of which
 holds absolute position i).  ``pos`` rides in as a scalar-prefetch operand
 so the mask is computed from SMEM, not HBM.
 
+**Sliding-window ring caches** (``window`` set): slot ``i`` no longer
+holds absolute position ``i`` but the *latest* written position congruent
+to ``i`` — ``slot_pos = pos - ((pos - i) mod slots)``.  The mask becomes a
+second masked range over that wrapped position map (written at all, and
+within the window), computed from the same SMEM scalars; the split-KV
+math is otherwise unchanged, so ring decode keeps the flat-latency
+property of the full-cache kernel.
+
 Layout contract (from ops.py): q (B, K, G, Dh) grouped queries;
 k/v (B, K, S, Dh); pos (B,) int32.
 """
@@ -44,7 +52,7 @@ _NEG_INF = -1e30
 
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
-                   block_k: int, scale: float):
+                   block_k: int, scale: float, window=None, slots=None):
     b = pl.program_id(0)
     ki = pl.program_id(2)
     pos = pos_ref[b]
@@ -57,9 +65,18 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale   # (G, bk)
-    kv_pos = ki * block_k + jax.lax.broadcasted_iota(
+    kv_slot = ki * block_k + jax.lax.broadcasted_iota(
         jnp.int32, (G, block_k), 1)
-    mask = kv_pos <= pos
+    if window is None:
+        # full cache: slot i holds absolute position i
+        mask = kv_slot <= pos
+    else:
+        # ring: slot i holds the latest position congruent to i.  The
+        # floor-mod keeps slot_pos in (pos - slots, pos], so only "ever
+        # written" (>= 0) and "inside the window" need checking — the
+        # second masked range of the wrapped slot -> position map
+        slot_pos = pos - ((pos - kv_slot) % slots)
+        mask = (slot_pos >= 0) & ((pos - slot_pos) < window)
     s = jnp.where(mask, s, _NEG_INF)
 
     m = jnp.max(s, axis=-1)                           # (G,)
@@ -75,11 +92,16 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
     l_ref[0, 0, 0] = l
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_k", "interpret", "window"))
 def flash_decode_bkgd(q, k, v, pos, *, block_k: int = DEFAULT_BLOCK_K,
-                      interpret: bool = False):
+                      interpret: bool = False, window=None):
     """q: (B, K, G, Dh); k/v: (B, K, S, Dh); pos: (B,) int32 — each
-    sequence attends kv slots [0, pos_b].  Returns (B, K, G, Dh)."""
+    sequence attends kv slots [0, pos_b].  Returns (B, K, G, Dh).
+
+    ``window`` (static) marks k/v as a sliding-window RING of S slots
+    (slot = position mod S, S = min(cache_len, window)): sequence b then
+    attends the wrapped slots holding positions (pos_b - window, pos_b]."""
     B, K, G, Dh = q.shape
     S = k.shape[2]
     block_k = min(block_k, S)
@@ -87,7 +109,9 @@ def flash_decode_bkgd(q, k, v, pos, *, block_k: int = DEFAULT_BLOCK_K,
     nk = S // block_k
     scale = Dh ** -0.5
 
-    kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale)
+    kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale,
+                               window=window,
+                               slots=(S if window is not None else None))
     o_part, m_part, l_part = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

@@ -44,12 +44,18 @@ def flash_attention(q, k, v, window=None, block_q: int = 512,
     return o.transpose(0, 2, 1, 3)
 
 
-def flash_decode(q, k, v, pos, block_k: int = 512, interpret=None):
+def flash_decode(q, k, v, pos, block_k: int = 512, interpret=None,
+                 window=None):
     """Model-layout wrapper for single-query decode attention.
 
     q: (B, 1, H, Dh) roped query; k/v: (B, S, K, Dh) KV cache (slot i =
     absolute position i, H % K == 0); pos: (B,) int32 — attends slots
     [0, pos_b].  Returns (B, 1, H, Dh).
+
+    ``window`` (static int) marks k/v as a sliding-window ring of S =
+    min(cache_len, window) slots (slot = position mod S): sequence b
+    attends only positions (pos_b - window, pos_b] through the wrapped
+    slot map.
     """
     if interpret is None:
         interpret = _on_cpu()
@@ -61,7 +67,8 @@ def flash_decode(q, k, v, pos, block_k: int = 512, interpret=None):
     qg = q[:, 0].reshape(B, K, G, Dh)                # grouped like the model
     kt = k.transpose(0, 2, 1, 3)                     # (B, K, S, Dh)
     vt = v.transpose(0, 2, 1, 3)
-    o = flash_decode_bkgd(qg, kt, vt, pos, block_k=bk, interpret=interpret)
+    o = flash_decode_bkgd(qg, kt, vt, pos, block_k=bk, interpret=interpret,
+                          window=window)
     return o.reshape(B, H, Dh)[:, None]
 
 

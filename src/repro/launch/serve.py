@@ -89,6 +89,21 @@ def parse_buckets(spec: str):
     return tuple(int(p) for p in spec.split(",") if p.strip())
 
 
+def resolve_tp(requested: int, n_devices: int) -> int:
+    """``--tp`` with a graceful fallback: fewer visible devices than the
+    requested shard count downgrades to tp=1 with a warning (and a hint
+    at the forced-host-device recipe) instead of crashing the deploy."""
+    if requested <= 1:
+        return 1
+    if n_devices < requested:
+        print(f"[serve] --tp {requested}: only {n_devices} device(s) "
+              f"visible — running tp=1 (set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={requested} before "
+              f"import to fake devices on CPU)")
+        return 1
+    return requested
+
+
 def resolve_use_pallas(requested: bool, backend: str) -> bool:
     """``--use-pallas`` with a graceful fallback: the split-KV decode
     kernels are TPU-Pallas, so anywhere else (CPU would run them
@@ -122,6 +137,12 @@ def main(argv=None) -> int:
                     help="'auto' (power-of-two), 'off', or comma lengths "
                          "e.g. 32,64,128 — prompts pad to the next bucket "
                          "so prefill compiles once per bucket")
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="tensor-parallel serving over N devices: params, "
+                         "decode dispatches and the paged KV pool shard "
+                         "over a (1, N) mesh's 'model' axis; greedy output "
+                         "stays bit-identical to --tp 1 (falls back to 1 "
+                         "when fewer devices are visible)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="route decode attention through the Pallas "
                          "split-KV flash-decode kernel (falls back to the "
@@ -205,6 +226,11 @@ def main(argv=None) -> int:
     for name, share in tenants.items():
         admission.add_tenant(name, shares=share)
     use_pallas = resolve_use_pallas(args.use_pallas, jax.default_backend())
+    tp = resolve_tp(args.tp, len(jax.devices()))
+    mesh = None
+    if tp > 1:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(1, tp)
     kv_paging = resolve_prefix_paging(args.prefix_cache, args.kv_paging)
     kv_paging = resolve_chunked_paging(args.max_batch_tokens, kv_paging)
     kv_paging = resolve_spec_paging(args.speculate, kv_paging)
@@ -227,7 +253,8 @@ def main(argv=None) -> int:
                           tracer=tracer,
                           speculate=args.speculate,
                           spec_source=args.spec_source,
-                          draft_model=draft_cfg)
+                          draft_model=draft_cfg,
+                          mesh=mesh)
     rng = np.random.default_rng(args.seed)
     names = list(tenants)
     qos_cycle = [q.strip() for q in args.qos.split(",") if q.strip()] \
@@ -283,6 +310,12 @@ def main(argv=None) -> int:
               f"(high-water {engine.allocator.high_water}, "
               f"{int(metrics.counter('serve_page_starvations').value())} "
               f"starvation requeues)")
+    if engine.tp.tp > 1:
+        ps = engine.tp.psums_per_token(cfg)
+        print(f"tensor parallel: {engine.tp.describe(cfg)} on "
+              f"{len(engine.tp.devices())} devices, "
+              f"{sum(ps.values())} psums/token "
+              f"(attn {ps['attn_out']}, mlp {ps['mlp_out']})")
     if engine.max_batch_tokens is not None:
         st = engine.serve_stats
         spent = st["decode_tokens"] + st["prefill_tokens"]

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.actshard import constrain
+from repro.core.actshard import constrain, maybe_psum, tp_will_reduce
 
 _NEG_INF = -1e30
 
@@ -67,7 +67,17 @@ def qkv_proj(p: dict, x: jax.Array, cfg: ModelConfig):
 
 
 def out_proj(p: dict, o: jax.Array) -> jax.Array:
-    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    # contracts the head dim — under serving TP (heads sharded over the
+    # mesh inside shard_map) each shard holds a partial sum here, hence
+    # the one cross-shard reduction per attention layer.  The partial
+    # stays float32 through the psum: summing rounded bf16 partials can
+    # flip near-tie logits vs the single-device contraction
+    w = p["wo"].astype(o.dtype)
+    if tp_will_reduce("attn_out"):
+        part = jnp.einsum("bshk,hkd->bsd", o, w,
+                          preferred_element_type=jnp.float32)
+        return maybe_psum(part, "attn_out").astype(o.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, w)
 
 
 # ------------------------------------------------- blockwise causal core ----
@@ -399,9 +409,10 @@ def attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     of the serving engine decodes at its own depth).
 
     ``use_pallas`` routes the attention through the split-KV flash-decode
-    kernel (``repro.kernels.flash_decode``) when the cache layout allows
-    it — full cache, no sliding-window ring, so slot i holds absolute
-    position i; the windowed ring stays on the reference path.
+    kernel (``repro.kernels.flash_decode``): full caches mask ``slot <=
+    pos`` (slot i holds absolute position i), sliding-window ring caches
+    pass ``window`` so the kernel masks through the wrapped
+    slot-to-position map instead of falling back to the reference path.
 
     Returns (out (B,1,d), updated cache).
     """
@@ -417,9 +428,9 @@ def attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
     cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
 
-    if use_pallas and cfg.sliding_window is None:
+    if use_pallas:
         from repro.kernels import ops as kops
-        o = kops.flash_decode(q, ck, cv, posv)
+        o = kops.flash_decode(q, ck, cv, posv, window=cfg.sliding_window)
         return out_proj(p, constrain(o, "heads")), {"k": ck, "v": cv}
 
     H, Dh = q.shape[2], q.shape[3]

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.actshard import constrain
+from repro.core.actshard import constrain, maybe_psum, tp_will_reduce
 
 
 def mlp_apply(p: dict, x: jax.Array, mlp_type: str) -> jax.Array:
@@ -19,7 +19,16 @@ def mlp_apply(p: dict, x: jax.Array, mlp_type: str) -> jax.Array:
         h = jnp.square(jax.nn.relu(h))
     else:
         raise ValueError(mlp_type)
-    return h @ p["w2"].astype(dtype)
+    # contracts d_ff — under serving TP (w1/w3 column- and w2 row-sharded
+    # inside shard_map) each shard holds a partial sum here.  The partial
+    # stays float32 through the psum: summing rounded bf16 partials can
+    # flip near-tie logits vs the single-device contraction
+    w2 = p["w2"].astype(dtype)
+    if tp_will_reduce("mlp_out"):
+        part = jnp.einsum("...f,fd->...d", h, w2,
+                          preferred_element_type=jnp.float32)
+        return maybe_psum(part, "mlp_out").astype(dtype)
+    return maybe_psum(h @ w2, "mlp_out")
 
 
 def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:

@@ -212,6 +212,25 @@ def cache_logical_axes(cfg: ModelConfig, paging: bool = False):
     return {"layers": layers}
 
 
+def cache_kv_head_dim(cfg: ModelConfig, paging: bool = False) -> int:
+    """Index of the ``kv_heads`` axis in every attention KV-cache leaf.
+
+    All engine-level cache layouts — the paged pool ``(G, pages, ps, K,
+    Dh)``, dense rows ``(G, B, slots, K, Dh)``, and one-request
+    prefill/chunk slices ``(G, B, S, K, Dh)`` — carry ``kv_heads`` at
+    the same position, which is what lets serving TP cover the whole
+    cache pytree with a single PartitionSpec prefix
+    (``serving.tp.cache_pspec``).  Derived from
+    :func:`cache_logical_axes` so a future layout change breaks loudly
+    here instead of silently mis-sharding."""
+    for leaf in cache_logical_axes(cfg, paging=paging)["layers"]:
+        for axes in leaf.values():
+            if "kv_heads" in axes:
+                return axes.index("kv_heads")
+    raise ValueError(
+        f"no attention KV leaf in the cache for cfg with ssm={cfg.ssm!r}")
+
+
 # ---------------------------------------------------------------- prefill ----
 
 def prefill(params, batch: dict, cfg: ModelConfig, run: RunConfig,

@@ -25,6 +25,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 #: physical page id backing every unallocated page-table entry
 NULL_PAGE = 0
 
@@ -146,3 +148,122 @@ class PageAllocator:
                 self._free.append(p)
                 self._in_use -= 1
         assert self._in_use >= 0, self._in_use
+
+
+class ShardedAllocatorView:
+    """Per-shard budget view over one :class:`PageAllocator`.
+
+    Under tensor parallelism every device holds its own head-slice of
+    every physical page, so one *logical* page id stands for ``shards``
+    device-local page slices allocated and freed in lockstep.  Today the
+    slices are symmetric — granting logical page ``p`` consumes one page
+    on every shard — so each budget vector is the scalar broadcast.  The
+    vector API is the contract that matters: admission
+    (``_fits_pages``/``_ensure_pages``/GrpTRES billing) consumes
+    per-shard minima, which is exactly the shape disaggregated serving
+    (prefill and decode pools on different shard sets) needs.
+    """
+
+    def __init__(self, allocator: PageAllocator, shards: int = 1):
+        assert shards >= 1, shards
+        self.allocator = allocator
+        self.shards = shards
+
+    def available_vector(self) -> np.ndarray:
+        """(shards,) free pages per shard."""
+        return np.full(self.shards, self.allocator.available(), np.int64)
+
+    def in_use_vector(self) -> np.ndarray:
+        """(shards,) pages with >= 1 holder, per shard."""
+        return np.full(self.shards, self.allocator.in_use, np.int64)
+
+    def min_available(self) -> int:
+        """Pages grantable on EVERY shard — the admission budget."""
+        return int(self.available_vector().min())
+
+
+class TwoLevelPageTable:
+    """(directory, leaf) two-level logical->physical page map (host side).
+
+    A flat per-slot row is ``pages_per_seq`` int32 wide — growing
+    ``cache_len`` to long-context sizes scales every slot's table with
+    it even when the slot holds a 30-token chat turn.  Here each slot
+    keeps a *directory* (dict: leaf index -> ``leaf_size``-wide int32
+    leaf, allocated on first touch), so host memory scales with pages
+    actually mapped, not with ``slots * pages_per_seq``.
+
+    Device dispatches still need a dense array; :meth:`dense`
+    materializes rows at a caller-chosen width (the engine buckets the
+    dispatch width to powers of two and grows it monotonically, so the
+    jitted decode programs recompile O(log pages_per_seq) times, not per
+    width).  :meth:`max_width` reports the minimal width covering every
+    live mapping.
+    """
+
+    def __init__(self, num_slots: int, pages_per_seq: int,
+                 leaf_size: int = 32):
+        assert num_slots >= 1 and pages_per_seq >= 1
+        self.num_slots = num_slots
+        self.pages_per_seq = pages_per_seq
+        self.leaf_size = min(int(leaf_size), pages_per_seq)
+        self._dirs: list[dict] = [{} for _ in range(num_slots)]
+        #: per-slot logical width = 1 + highest mapped index (0 = empty)
+        self._widths = [0] * num_slots
+
+    def _leaf(self, slot: int, li: int) -> np.ndarray:
+        leaf = self._dirs[slot].get(li)
+        if leaf is None:
+            leaf = np.full(self.leaf_size, NULL_PAGE, np.int32)
+            self._dirs[slot][li] = leaf
+        return leaf
+
+    def clear(self, slot: int):
+        """Reset a slot's row to all-NULL (drops its leaves)."""
+        self._dirs[slot] = {}
+        self._widths[slot] = 0
+
+    def set_range(self, slot: int, start: int, pages):
+        """Map logical pages ``[start, start + len(pages))`` to ``pages``."""
+        n = len(pages)
+        if n == 0:
+            return
+        assert start >= 0 and start + n <= self.pages_per_seq, \
+            (start, n, self.pages_per_seq)
+        arr = np.asarray(pages, np.int32)
+        i = 0
+        while i < n:
+            li, off = divmod(start + i, self.leaf_size)
+            take = min(self.leaf_size - off, n - i)
+            self._leaf(slot, li)[off:off + take] = arr[i:i + take]
+            i += take
+        self._widths[slot] = max(self._widths[slot], start + n)
+
+    def row(self, slot: int, width: int = None) -> np.ndarray:
+        """Dense (width,) int32 row for one slot (default: full width)."""
+        width = self.pages_per_seq if width is None else width
+        out = np.full(width, NULL_PAGE, np.int32)
+        for li, leaf in self._dirs[slot].items():
+            lo = li * self.leaf_size
+            if lo >= width:
+                continue
+            take = min(self.leaf_size, width - lo)
+            out[lo:lo + take] = leaf[:take]
+        return out
+
+    def dense(self, width: int = None) -> np.ndarray:
+        """Dense (num_slots, width) materialization (device dispatch /
+        test introspection)."""
+        width = self.pages_per_seq if width is None else width
+        return np.stack([self.row(s, width) for s in
+                         range(self.num_slots)])
+
+    def max_width(self) -> int:
+        """Smallest dense width covering every live mapping."""
+        return max(self._widths, default=0)
+
+    @property
+    def directory_leaves(self) -> int:
+        """Allocated leaves across all slots (host-memory footprint in
+        units of ``leaf_size`` int32 — the two-level win over
+        ``num_slots * pages_per_seq``)."""
+        return sum(len(d) for d in self._dirs)

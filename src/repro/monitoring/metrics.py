@@ -61,6 +61,11 @@ METRIC_SERVE_PREFIX_REUSED_TOKENS = "serve_prefix_reused_tokens"
 #: cached prefix pages LRU-evicted back to the free pool under pressure
 METRIC_SERVE_PREFIX_EVICTIONS = "serve_prefix_evicted_pages"
 
+# Tensor-parallel serving (paged KV pool sharded across the mesh).
+#: KV pages with >= 1 holder, a gauge labeled {device=} — one series per
+#: shard, so asymmetric pool pressure is visible before it starves a shard
+METRIC_SERVE_KV_PAGES_IN_USE = "serve_kv_pages_in_use"
+
 # Speculative decoding (draft-and-verify inside the fused chunk).
 #: draft tokens proposed to the verifier
 METRIC_SPEC_PROPOSED = "serve_spec_proposed_total"

@@ -12,6 +12,7 @@ from repro.serving.spec import (
     ModelDraftSource, NgramDraftSource, NgramIndex, draft_config,
     greedy_accept, rejection_sample,
 )
+from repro.serving.tp import TPPlan, plan_tp
 
 __all__ = ["AdmissionController", "DecodeEngine", "ModelDraftSource",
            "NgramDraftSource", "NgramIndex", "PrefixCache",
@@ -19,5 +20,5 @@ __all__ = ["AdmissionController", "DecodeEngine", "ModelDraftSource",
            "chunked_serve_step_lowering_args", "draft_config",
            "fused_serve_step_lowering_args", "greedy_accept",
            "make_chunked_serve_step", "make_fused_serve_step",
-           "make_serve_step", "rejection_sample",
-           "serve_step_lowering_args"]
+           "make_serve_step", "plan_tp", "rejection_sample",
+           "serve_step_lowering_args", "TPPlan"]

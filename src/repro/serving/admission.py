@@ -47,6 +47,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Optional
 
+import numpy as np
+
 from repro.policy import (
     FairShareTree, PriorityWeights, QOS, default_qos_table, tres_within,
 )
@@ -255,9 +257,11 @@ class AdmissionController:
         held = {TRES_SLOTS: float(tenant.slots_by_qos.get(req.qos, 0)),
                 TRES_KV_PAGES: float(tenant.pages_by_qos.get(req.qos, 0))}
         # _est_pages: the paged engine stamps its page estimate on submit;
-        # dense mode leaves it 0 so only the slot cap binds
+        # dense mode leaves it 0 so only the slot cap binds.  Under TP the
+        # estimate may arrive as a per-shard vector (one logical page =
+        # one page slice per shard); the cap binds on the tightest shard
         ask = {TRES_SLOTS: 1.0,
-               TRES_KV_PAGES: float(getattr(req, "_est_pages", 0))}
+               TRES_KV_PAGES: float(np.max(getattr(req, "_est_pages", 0)))}
         return not tres_within(held, ask, qos.grp_tres)
 
     def _best_tenant(self, eligible=None) -> Optional[Tenant]:
@@ -309,11 +313,15 @@ class AdmissionController:
         chunk-by-chunk as a partial prefill's pages actually materialize
         (TRUE holdings, returned in full on promotion-exit, preemption,
         or starvation), so mid-prefill requests occupy exactly what they
-        use."""
+        use.
+
+        ``delta`` may be a per-shard vector (TP engines): the ledger
+        tracks the tightest shard, since that is the shard the GrpTRES
+        cap protects."""
         t = self.tenants.get(req.tenant)
         if t is not None:
             t.pages_by_qos[req.qos] = max(
-                t.pages_by_qos.get(req.qos, 0) + delta, 0)
+                t.pages_by_qos.get(req.qos, 0) + int(np.max(delta)), 0)
 
     # -------------------------------------------------------- preemption ----
     def pick_victim(self, candidates: list):

@@ -86,7 +86,6 @@ serve-step utilization section.
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Union
@@ -94,6 +93,7 @@ from typing import Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as PSpec
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import init_cache, prefill
@@ -101,16 +101,18 @@ from repro.models.model import (
     decode_n, decode_step, prefill_chunk, prefill_suffix, verify_tokens,
 )
 from repro.models.paging import (
-    NULL_PAGE, PageAllocator, PagedKVConfig, pages_for,
+    NULL_PAGE, PageAllocator, PagedKVConfig, ShardedAllocatorView,
+    TwoLevelPageTable, pages_for,
 )
 from repro.monitoring import MetricsRegistry, Tracer
 from repro.monitoring.metrics import (
-    METRIC_SERVE_PREEMPTIONS, METRIC_SERVE_PREFIX_EVICTIONS,
-    METRIC_SERVE_PREFIX_HITS, METRIC_SERVE_PREFIX_MISSES,
-    METRIC_SERVE_PREFIX_REUSED_TOKENS, METRIC_SERVE_TENANT_ADMITTED,
-    METRIC_SERVE_TENANT_TOKENS, METRIC_SPEC_ACCEPT_RATE,
-    METRIC_SPEC_ACCEPTED, METRIC_SPEC_PROPOSED,
+    METRIC_SERVE_KV_PAGES_IN_USE, METRIC_SERVE_PREEMPTIONS,
+    METRIC_SERVE_PREFIX_EVICTIONS, METRIC_SERVE_PREFIX_HITS,
+    METRIC_SERVE_PREFIX_MISSES, METRIC_SERVE_PREFIX_REUSED_TOKENS,
+    METRIC_SERVE_TENANT_ADMITTED, METRIC_SERVE_TENANT_TOKENS,
+    METRIC_SPEC_ACCEPT_RATE, METRIC_SPEC_ACCEPTED, METRIC_SPEC_PROPOSED,
 )
+from repro.serving import tp as tp_mod
 from repro.serving.admission import (
     SERVING_TRES_WEIGHTS, AdmissionController,
 )
@@ -193,10 +195,21 @@ class DecodeEngine:
                  speculate: int = 0,
                  spec_source: str = "ngram",
                  draft_model: Optional[ModelConfig] = None,
-                 index_generated: Optional[bool] = None):
+                 index_generated: Optional[bool] = None,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.run = run or RunConfig(remat="none")
+        # ---- tensor parallelism (mesh=None -> single-shard, zero cost) ----
+        # resolved up front: the paged pool view and every jitted builder
+        # below depend on the plan
+        self.tp = tp_mod.plan_tp(cfg, mesh)
+        for note in self.tp.notices:
+            print(f"[serve] tp: {note}")
+        self._pp = tp_mod.param_pspecs(cfg, self.tp) if self.tp.active \
+            else None
+        self._cc = tp_mod.cache_pspec(self.tp, cfg) if self.tp.active \
+            else None
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.metrics = metrics or MetricsRegistry()
@@ -220,8 +233,21 @@ class DecodeEngine:
                          w.get("gres/kv_token",
                                SERVING_TRES_WEIGHTS["gres/kv_token"]))
             self.allocator = PageAllocator(self.paging.num_pages)
-            self.page_tables = np.full(
-                (num_slots, self.paging.pages_per_seq), NULL_PAGE, np.int32)
+            # one logical page id = one page slice per shard (TP shards
+            # the pool along kv heads); admission consumes the per-shard
+            # budget vectors, not the scalar
+            self.pool_view = ShardedAllocatorView(
+                self.allocator,
+                shards=(self.tp.tp if self.tp.active and self.tp.shard_attn
+                        else 1))
+            # two-level (directory, leaf) page map: host memory scales
+            # with pages actually mapped, not slots * pages_per_seq
+            self._ptab = TwoLevelPageTable(num_slots,
+                                           self.paging.pages_per_seq)
+            #: dispatch-width bucket for the classic paged mode (grows
+            #: monotonically in powers of two, so the decode programs
+            #: recompile O(log pages_per_seq) times)
+            self._table_width = 1
             self._slot_pages: list[list[int]] = [[] for _ in
                                                  range(num_slots)]
         self.prefix: Optional[PrefixCache] = None
@@ -238,6 +264,16 @@ class DecodeEngine:
             self._page_holders: dict[int, int] = {}
         self.cache = init_cache(cfg, num_slots, cache_len,
                                 paging=self.paging)
+        if self.tp.active:
+            # place params and the KV pool on the mesh: attention weights
+            # and cache split along (kv) heads, MLP along d_ff, everything
+            # else (embed/lm_head/norms) replicated so every shard holds
+            # full logits and sampling needs no collective
+            self.params = jax.device_put(
+                self.params, tp_mod.param_shardings(cfg, self.tp))
+            self.cache = jax.device_put(
+                self.cache, tp_mod.cache_shardings(self.cache, self.tp,
+                                                   cfg))
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.pos = np.zeros(num_slots, np.int64)       # next position per slot
         self.last_tok = np.zeros(num_slots, np.int32)
@@ -372,26 +408,63 @@ class DecodeEngine:
         return PagedKVConfig.for_budget(self.num_slots * self.cache_len,
                                         kv_page_size, self.cache_len)
 
+    # -------------------------------------------------------- page table ----
+    @property
+    def page_tables(self) -> np.ndarray:
+        """Dense (num_slots, pages_per_seq) logical->physical view of the
+        two-level table (tests/diagnostics; dispatches use the bucketed
+        :meth:`_dispatch_table`)."""
+        return self._ptab.dense()
+
+    def _dispatch_table(self) -> np.ndarray:
+        """The page table a decode/verify dispatch sees.  Budgeted mode
+        pins the full ``pages_per_seq`` width — its compile-count
+        invariant (``chunk_compilations() <= 2 * buckets``) admits no
+        per-width retraces.  Classic paged mode buckets the width to a
+        monotonically-growing power of two covering every live mapping,
+        so short requests dispatch small gathers and the programs
+        recompile O(log pages_per_seq) times over the engine's life."""
+        if self.max_batch_tokens is not None:
+            return self._ptab.dense()
+        w = max(self._ptab.max_width(), 1)
+        while self._table_width < w:
+            self._table_width *= 2
+        self._table_width = min(self._table_width,
+                                self.paging.pages_per_seq)
+        return self._ptab.dense(self._table_width)
+
     # ------------------------------------------------------------ jitted ----
+    def _tp_wrap(self, fn, in_kinds: str, out_kinds: str,
+                 donate: tuple = ()):
+        """``tp.wrap`` with per-argument specs named by kind: ``p`` the
+        params pytree, ``c`` a cache pytree (prefix spec — every 5-D
+        leaf carries kv_heads at dim 3), ``r`` replicated.  Inactive
+        plans compile to a plain ``jax.jit`` with identical semantics."""
+        if not self.tp.active:
+            return tp_mod.wrap(self.tp, fn, (), (), donate)
+        m = {"p": self._pp, "c": self._cc, "r": PSpec()}
+        ins = tuple(m[k] for k in in_kinds)
+        outs = (m[out_kinds] if len(out_kinds) == 1
+                else tuple(m[k] for k in out_kinds))
+        return tp_mod.wrap(self.tp, fn, ins, outs, donate)
+
     def _build_step(self):
         cfg, run = self.cfg, self.run
 
         if self.paging is not None:
-            @jax.jit
             def step_paged(params, cache, token, pos, page_table):
                 logits, cache = decode_step(params, cache, token, pos, cfg,
                                             run, page_table=page_table)
                 return logits[:, 0], cache
 
-            return step_paged
+            return self._tp_wrap(step_paged, "pcrrr", "rc")
 
-        @jax.jit
         def step(params, cache, token, pos):
             # per-slot positions: (B,) — decode_step handles scalar or vector
             logits, cache = decode_step(params, cache, token, pos, cfg, run)
             return logits[:, 0], cache
 
-        return step
+        return self._tp_wrap(step, "pcrr", "rc")
 
     def _build_decode_n(self, chunk: Optional[int] = None):
         cfg, run = self.cfg, self.run
@@ -399,28 +472,27 @@ class DecodeEngine:
         chunk = self.decode_chunk if chunk is None else chunk
 
         if self.paging is not None:
-            @functools.partial(jax.jit, donate_argnums=(1,))
             def step_n_paged(params, cache, token, pos, remaining, done,
                              eos, temps, key, page_table, limit):
                 return decode_n(params, cache, token, pos, remaining, done,
                                 eos, temps, key, cfg, run, chunk, cache_len,
                                 page_table=page_table, limit=limit)
 
-            return step_n_paged
+            return self._tp_wrap(step_n_paged, "pc" + "r" * 9, "rcrrrrr",
+                                 donate=(1,))
 
-        @functools.partial(jax.jit, donate_argnums=(1,))
         def step_n(params, cache, token, pos, remaining, done, eos, temps,
                    key):
             return decode_n(params, cache, token, pos, remaining, done, eos,
                             temps, key, cfg, run, chunk, cache_len)
 
-        return step_n
+        return self._tp_wrap(step_n, "pc" + "r" * 7, "rcrrrrr",
+                             donate=(1,))
 
     def _build_insert(self):
         if self.paging is not None:
             ps = self.paging.page_size
 
-            @functools.partial(jax.jit, donate_argnums=(0,))
             def insert_paged(pool_cache, one_cache, page_ids):
                 # scatter the request's prefilled lines into its pages;
                 # pad-tail pages ride on the null page (id 0), whose
@@ -438,9 +510,8 @@ class DecodeEngine:
                         pages.astype(pool_leaf.dtype))
                 return jax.tree.map(put, pool_cache, one_cache)
 
-            return insert_paged
+            return self._tp_wrap(insert_paged, "ccr", "c", donate=(0,))
 
-        @functools.partial(jax.jit, donate_argnums=(0,))
         def insert(batch_cache, one_cache, slot):
             def put(batch_leaf, one_leaf):
                 return jax.lax.dynamic_update_slice_in_dim(
@@ -448,7 +519,7 @@ class DecodeEngine:
                     axis=1)
             return jax.tree.map(put, batch_cache, one_cache)
 
-        return insert
+        return self._tp_wrap(insert, "ccr", "c", donate=(0,))
 
     def _build_prefill(self):
         cfg, run, cache_len = self.cfg, self.run, self.cache_len
@@ -460,22 +531,20 @@ class DecodeEngine:
             # SSM/hybrid bucketed prefill: real tokens sit at a traced
             # chunk-aligned front offset, so one program per bucket
             # serves every prompt length (front_pad/num_real are traced)
-            @jax.jit
             def prefill_front_fn(params, tokens, front_pad, num_real,
                                  last_pos):
                 return prefill(params, {"tokens": tokens}, cfg, run,
                                cache_len=cache_len, last_pos=last_pos,
                                front_pad=front_pad, num_real=num_real)
 
-            return prefill_front_fn
+            return self._tp_wrap(prefill_front_fn, "prrrr", "rc")
 
-        @jax.jit
         def prefill_fn(params, tokens, last_pos):
             return prefill(params, {"tokens": tokens}, cfg, run,
                            cache_len=None if paged else cache_len,
                            last_pos=last_pos)
 
-        return prefill_fn
+        return self._tp_wrap(prefill_fn, "prr", "rc")
 
     def _build_suffix_prefill(self):
         """Jitted suffix prefill for prefix-cache hits: compiles once per
@@ -483,13 +552,12 @@ class DecodeEngine:
         so any prefix depth reuses the same program."""
         cfg, run = self.cfg, self.run
 
-        @jax.jit
         def suffix_fn(params, cache, tokens, page_table, start, last_pos):
             return prefill_suffix(params, {"tokens": tokens}, cache,
                                   page_table, start, cfg, run,
                                   last_pos=last_pos)
 
-        return suffix_fn
+        return self._tp_wrap(suffix_fn, "pcrrrr", "rc")
 
     @staticmethod
     def _scatter_chunk(cache, slices, pages, offs):
@@ -512,7 +580,6 @@ class DecodeEngine:
         request at every depth reuses the same O(buckets) programs."""
         cfg, run = self.cfg, self.run
 
-        @functools.partial(jax.jit, donate_argnums=(1,))
         def chunk_fn(params, cache, tokens, page_table, start, last_pos,
                      pages, offs):
             logits, slices = prefill_chunk(
@@ -521,7 +588,7 @@ class DecodeEngine:
             return logits, DecodeEngine._scatter_chunk(
                 cache, slices, pages, offs)
 
-        return chunk_fn
+        return self._tp_wrap(chunk_fn, "pc" + "r" * 6, "rc", donate=(1,))
 
     def _build_mixed_step(self):
         """THE budgeted serve step: one dispatch running a prefill chunk
@@ -534,7 +601,6 @@ class DecodeEngine:
         cfg, run, cache_len = self.cfg, self.run, self.cache_len
         num_tokens = self.decode_chunk
 
-        @functools.partial(jax.jit, donate_argnums=(1,))
         def mixed(params, cache, token, pos, remaining, done, eos, temps,
                   key, page_table, limit, c_tokens, c_row, c_start,
                   c_last, c_pages, c_offs):
@@ -548,7 +614,8 @@ class DecodeEngine:
                            cache_len, page_table=page_table, limit=limit)
             return out + (c_logits,)
 
-        return mixed
+        return self._tp_wrap(mixed, "pc" + "r" * 15, "rcrrrrrr",
+                             donate=(1,))
 
     def _build_verify(self):
         """Jitted speculative verification: score ``last_tok`` plus up to
@@ -560,7 +627,6 @@ class DecodeEngine:
         logits ride along for temperature-mode rejection sampling."""
         cfg, run = self.cfg, self.run
 
-        @functools.partial(jax.jit, donate_argnums=(1,))
         def verify(params, cache, tokens, pos0, pages, offs, page_table):
             logits, cache = verify_tokens(params, cache, tokens, pos0,
                                           pages, offs, page_table, cfg,
@@ -568,7 +634,7 @@ class DecodeEngine:
             return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
                     logits, cache)
 
-        return verify
+        return self._tp_wrap(verify, "pc" + "r" * 5, "rrc", donate=(1,))
 
     def _build_mixed_verify(self):
         """Budgeted serve step with speculation: one dispatch running a
@@ -578,7 +644,6 @@ class DecodeEngine:
         role."""
         cfg, run = self.cfg, self.run
 
-        @functools.partial(jax.jit, donate_argnums=(1,))
         def mixed(params, cache, tokens, pos0, pages, offs, page_table,
                   c_tokens, c_row, c_start, c_last, c_pages, c_offs):
             c_logits, c_slices = prefill_chunk(
@@ -592,7 +657,7 @@ class DecodeEngine:
             return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
                     logits, cache, c_logits)
 
-        return mixed
+        return self._tp_wrap(mixed, "pc" + "r" * 11, "rrcr", donate=(1,))
 
     def _resolve_buckets(self, spec):
         """Power-of-two prompt-length buckets, or None (exact-length
@@ -649,6 +714,36 @@ class DecodeEngine:
             return 0
         return (int(self._chunk_fn._cache_size())
                 + int(self._mixed_step._cache_size()))
+
+    def tp_stats(self) -> dict:
+        """Tensor-parallel shard stats behind ``sdiag``'s TP section:
+        the resolved plan, per-device page-pool occupancy, and the
+        cross-shard reduction count one decode token pays."""
+        plan = self.tp
+        out = {"tp": plan.tp,
+               "active": plan.active,
+               "plan": plan.describe(self.cfg),
+               "devices": [str(d) for d in plan.devices()],
+               "notices": list(plan.notices),
+               "psums_per_token": plan.psums_per_token(self.cfg)}
+        if self.paging is not None:
+            out["kv_pages_in_use"] = [
+                int(n) for n in self.pool_view.in_use_vector()]
+            out["kv_pages_total"] = self.paging.usable_pages
+        return out
+
+    def _update_pool_gauges(self):
+        """Per-device ``serve_kv_pages_in_use`` gauges (one series per
+        shard; single-shard engines report the default device)."""
+        if self.paging is None:
+            return
+        g = self.metrics.gauge(
+            METRIC_SERVE_KV_PAGES_IN_USE,
+            "KV pages with >= 1 holder, per device")
+        devs = self.tp.devices() or jax.devices()[:1]
+        for k, n in enumerate(self.pool_view.in_use_vector()):
+            dev = devs[k] if k < len(devs) else f"shard{k}"
+            g.set(int(n), device=str(dev))
 
     # ----------------------------------------------------------- tracing ----
     def _trace_root(self, req: Request):
@@ -729,7 +824,9 @@ class DecodeEngine:
         prompt is mostly cached admits into a pool that looks full."""
         toks = self._resume_tokens(req)
         need = pages_for(len(toks), self.paging.page_size)
-        budget = self.allocator.available()
+        # per-shard budget vector: a logical page is grantable only when
+        # EVERY shard can hold its slice, so admission gates on the min
+        budget = self.pool_view.min_available()
         if self.prefix is not None and need > budget:
             # matched pages cost nothing, and evictable cached pages
             # count as free — EXCLUDING the match itself: placement pins
@@ -789,7 +886,7 @@ class DecodeEngine:
         valve that fires BEFORE scavenger preemption)."""
         got = self.allocator.alloc(need)
         if got is None and self.prefix is not None:
-            freed = self.prefix.evict(need - self.allocator.available())
+            freed = self.prefix.evict(need - self.pool_view.min_available())
             if freed:
                 self.metrics.counter(
                     METRIC_SERVE_PREFIX_EVICTIONS,
@@ -930,8 +1027,8 @@ class DecodeEngine:
             page_ids[:len(priv)] = priv
             self.cache = self._insert(self.cache, cache1,
                                       jnp.asarray(page_ids))
-            self.page_tables[slot] = NULL_PAGE
-            self.page_tables[slot, :len(pages)] = pages
+            self._ptab.clear(slot)
+            self._ptab.set_range(slot, 0, pages)
             self._slot_pages[slot] = pages
             if self.prefix is not None:
                 # donate the complete prompt pages to the radix index
@@ -1042,7 +1139,7 @@ class DecodeEngine:
         else:
             self.admission.adjust_pages(req, -req._est_pages)
         self._slot_pages[slot] = []
-        self.page_tables[slot] = NULL_PAGE
+        self._ptab.clear(slot)
 
     def _vacate(self, victim: Request) -> int:
         """Shared eviction bookkeeping: clear the slot, free its pages,
@@ -1195,7 +1292,7 @@ class DecodeEngine:
                 got = self._alloc_or_evict(need)
             if got is None:                    # partial growth: best effort
                 got = self.allocator.alloc(
-                    min(need, self.allocator.available()))
+                    min(need, self.pool_view.min_available()))
             if got:
                 if self.prefix is not None:
                     for p in got:
@@ -1207,7 +1304,7 @@ class DecodeEngine:
                 self._hold_pages(req, len(got))
                 n0 = len(self._slot_pages[i])
                 self._slot_pages[i].extend(got)
-                self.page_tables[i, n0:n0 + len(got)] = got
+                self._ptab.set_range(i, n0, got)
             if self._capacity(i) <= int(self.pos[i]):
                 # starved: not even the current token's page
                 self._requeue_starved(i)
@@ -1381,8 +1478,8 @@ class DecodeEngine:
             tr.end(part.span, ts=now, chunks=part.chunks,
                    pos_filled=part.pos_filled, prefix_pages=part.n_shared,
                    pages_allocated=len(part.pages) - part.n_shared)
-        self.page_tables[slot] = NULL_PAGE
-        self.page_tables[slot, :len(part.pages)] = part.pages
+        self._ptab.clear(slot)
+        self._ptab.set_range(slot, 0, part.pages)
         self._slot_pages[slot] = part.pages
         if self.prefix is not None:
             # donate the complete prompt pages to the radix index;
@@ -1449,7 +1546,7 @@ class DecodeEngine:
         self.slots[slot] = None
         req._slot = -1
         self._slot_pages[slot] = []
-        self.page_tables[slot] = NULL_PAGE
+        self._ptab.clear(slot)
         self._partials.remove(part)
         del self._prefill_slots[slot]
         self.admission.release(req)
@@ -1558,6 +1655,7 @@ class DecodeEngine:
         continuous-batching iteration instead: decode lanes plus packed
         prefill chunks under one budget."""
         self._admit()
+        self._update_pool_gauges()
         if self.max_batch_tokens is not None:
             return self._step_budgeted()
         active = [i for i, r in enumerate(self.slots) if r is not None]
@@ -1623,7 +1721,8 @@ class DecodeEngine:
                     jnp.asarray(self.remaining.astype(np.int32)),
                     jnp.asarray(done), jnp.asarray(eos),
                     jnp.asarray(temps), self._key,
-                    jnp.asarray(self.page_tables), jnp.asarray(limit),
+                    jnp.asarray(self._dispatch_table()),
+                    jnp.asarray(limit),
                     jnp.asarray(chunk_plan.tokens)[None],
                     jnp.asarray(chunk_plan.row)[None],
                     jnp.asarray(chunk_plan.start, jnp.int32),
@@ -1639,7 +1738,8 @@ class DecodeEngine:
                         jnp.asarray(self.remaining.astype(np.int32)),
                         jnp.asarray(done), jnp.asarray(eos),
                         jnp.asarray(temps), self._key,
-                        jnp.asarray(self.page_tables), jnp.asarray(limit))
+                        jnp.asarray(self._dispatch_table()),
+                        jnp.asarray(limit))
         else:
             toks, self.cache, token, pos, remaining, done_d, self._key = \
                 self._decode_n(
@@ -1787,7 +1887,7 @@ class DecodeEngine:
         chunk_out = None
         args = (self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(pos0), jnp.asarray(pages), jnp.asarray(offs),
-                jnp.asarray(self.page_tables))
+                jnp.asarray(self._dispatch_table()))
         if chunk_plan is not None:
             greedy, logits, self.cache, chunk_out = self._mixed_verify(
                 *args,
@@ -1908,7 +2008,7 @@ class DecodeEngine:
         if self.paging is not None:
             logits, self.cache = self._step(
                 self.params, self.cache, token, pos,
-                jnp.asarray(self.page_tables))
+                jnp.asarray(self._dispatch_table()))
         else:
             logits, self.cache = self._step(self.params, self.cache, token,
                                             pos)

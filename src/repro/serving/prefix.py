@@ -33,6 +33,10 @@ This module is the host-side index that makes the match:
 
 Nothing here touches the device: the engine scatters/gathers through
 page tables; this class only decides which physical pages mean what.
+Tensor parallelism keeps it that way — a sharded pool stores ``1/tp``
+of every page's KV heads per device, but page *ids* remain one logical
+space, so matching, refcounts, COW forks, and eviction run unchanged
+whatever the mesh looks like (``serving/tp.py``).
 """
 from __future__ import annotations
 
