@@ -492,6 +492,145 @@ print(json.dumps({
     assert ratio >= 1.8, (rep["base_peak"], rep["tp_peak"])
 
 
+def bench_router_scaling(results: list):
+    """The elastic-serving claims.
+
+    (a) Aggregate throughput: 2 replicas >= 1.8x 1 replica at equal
+    per-replica HBM.  Replicas share nothing — a parallel deployment's
+    wall clock is the *busiest* replica's compute time — so aggregate
+    tok/s is tokens / max per-replica busy seconds, each replica's
+    dispatches timed for real.  In-process the dispatches serialize, so
+    this is also an honest router-balance gate: a skewed router piles
+    the work (and the busy seconds) onto one replica and the ratio
+    collapses to ~1x.  Greedy outputs must stay bit-identical to the
+    single-replica run.
+
+    (b) Affinity hit rate: prefix-affinity routing >= 1.5x round-robin's
+    prefix-cache hit rate on 16 requests drawn from two 400-token
+    system-prompt groups, with each replica's page pool sized to hold
+    roughly ONE group's prefix.  Affinity pins each group to one
+    replica's radix index (one cold miss per group); round-robin
+    interleaves both groups onto both replicas and LRU-thrashes the
+    pools.
+    """
+    from repro.monitoring import MetricsRegistry
+    from repro.serving import Router
+    from repro.serving.router import HashRing, affinity_key
+
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+
+    # ------------------------------------------ (a) throughput scaling ----
+    def serve(n_replicas):
+        metrics = MetricsRegistry()
+
+        def make_engine(admission):
+            return DecodeEngine(cfg, params, num_slots=4, cache_len=128,
+                                metrics=metrics, admission=admission,
+                                decode_chunk=8, prefill_buckets="auto")
+
+        # round-robin + a uniform workload = exact per-replica balance,
+        # so part (a) measures scaling, not placement luck
+        router = Router(make_engine, replicas=n_replicas, policy="rr",
+                        metrics=metrics)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 16).astype(
+                            np.int32), max_new_tokens=16)
+                for i in range(16)]
+        wrng = np.random.default_rng(1)
+        warm = [Request(rid=100 + i,
+                        prompt=wrng.integers(0, cfg.vocab_size, 16).astype(
+                            np.int32), max_new_tokens=16)
+                for i in range(2 * n_replicas)]
+        for r in warm:                  # absorb per-engine compiles
+            router.submit(r)
+        router.run_to_completion()
+        for rep in router.replicas.values():
+            rep.busy_s = 0.0
+        for r in reqs:
+            router.submit(r)
+        router.run_to_completion()
+        toks = sum(len(r.output) for r in reqs)
+        busy = max(router.busy_seconds().values())
+        return toks / busy, busy, [list(r.output) for r in reqs]
+
+    tps1, busy1, out1 = serve(1)
+    tps2, busy2, out2 = serve(2)
+    ratio = tps2 / tps1
+    results.append(("serving_router_scaling", busy2 * 1e6,
+                    f"{tps2:,.0f} agg tok/s on 2 replicas vs {tps1:,.0f} "
+                    f"on 1 ({ratio:.1f}x, busiest-replica wall)"))
+    assert out2 == out1, "2-replica routing changed greedy output"
+    assert ratio >= 1.8, (tps1, tps2)
+
+    # -------------------------------------- (b) affinity vs round-robin ----
+    page, cache_len = 16, 512
+    # two 400-token system prompts, seed-searched (deterministically) so
+    # the ring maps them to DIFFERENT replicas — the bench measures
+    # routing policy, not a hash collision
+    ring = HashRing()
+    ring.add(0)
+    ring.add(1)
+    grng = np.random.default_rng(17)
+    groups = []
+    while len(groups) < 2:
+        g = grng.integers(2, cfg.vocab_size, 400).astype(np.int32)
+        if ring.lookup(affinity_key(g, page)) == len(groups):
+            groups.append(g)
+
+    def hit_rate(policy):
+        metrics = MetricsRegistry()
+
+        def make_engine(admission):
+            # 27 usable pages: ONE group's 25-page prefix + a working
+            # margin, so holding both groups is impossible and the
+            # interleaved (round-robin) arrival order must LRU-thrash
+            return DecodeEngine(cfg, params, num_slots=2,
+                                cache_len=cache_len, metrics=metrics,
+                                admission=admission, decode_chunk=4,
+                                prefill_buckets="auto", kv_page_size=page,
+                                kv_pages=28, prefix_cache=True)
+
+        router = Router(make_engine, replicas=2, policy=policy,
+                        metrics=metrics)
+        rng = np.random.default_rng(13)
+        reqs = []
+        for i in range(16):
+            tail = rng.integers(2, cfg.vocab_size, 8).astype(np.int32)
+            reqs.append(Request(
+                rid=i, prompt=np.concatenate([groups[(i // 2) % 2], tail]),
+                max_new_tokens=8))
+        t0 = time.perf_counter()
+        for r in reqs:
+            router.submit(r)
+        router.run_to_completion()
+        dt = time.perf_counter() - t0
+        hits = int(metrics.counter("serve_prefix_hits").value())
+        misses = int(metrics.counter("serve_prefix_misses").value())
+        reused = int(metrics.counter(
+            "serve_prefix_reused_tokens").value())
+        frac = reused / sum(len(r.prompt) for r in reqs)
+        return hits / (hits + misses), frac, dt
+
+    # no cross-policy output assert here: the round-robin run thrashes
+    # the pool BY DESIGN, and a starvation requeue re-prefills through a
+    # different bucketed program whose f32 reassociation is not bitwise
+    # the incremental decode (same per-schedule caveat bench_tp_capacity
+    # documents) — the bit-identity acceptance gate lives in part (a)
+    # and tests/test_router.py on starvation-free workloads
+    aff_rate, aff_frac, aff_dt = hit_rate("affinity")
+    rr_rate, rr_frac, _ = hit_rate("rr")
+    results.append(("serving_router_affinity", aff_dt * 1e6,
+                    f"prefix hit rate {aff_rate:.0%} affinity vs "
+                    f"{rr_rate:.0%} round-robin (reused prompt tokens "
+                    f"{aff_frac:.0%} vs {rr_frac:.0%}; 2 replicas, two "
+                    f"400-token system prompts)"))
+    # >= 1.5x round-robin, and good in absolute terms (one cold miss
+    # per group per replica is 14/16 = 88%)
+    assert aff_rate >= max(1.5 * rr_rate, 0.5), (aff_rate, rr_rate)
+
+
 def bench_prefill_latency(results: list):
     import jax.numpy as jnp
     from repro.configs import RunConfig
@@ -525,4 +664,5 @@ def run(results: list):
     bench_chunked_prefill_ttft(results)
     bench_speculative_tokps(results)
     bench_tp_capacity(results)
+    bench_router_scaling(results)
     bench_prefill_latency(results)

@@ -145,8 +145,14 @@ def compare_against(results, baseline_path: str,
         for key in sorted(shared):
             check(f"{name}.{key}", old_pct[key], pct[key])
     missing = sorted(set(base) - {row[0] for row in results})
-    for name in missing:
-        print(f"[compare] {name}: in baseline but not run",
+    if missing:
+        # a bench present in the baseline but absent from this run would
+        # otherwise sail through the gate unexamined (a renamed bench, or
+        # a partial `--only` run against a full baseline) — name the
+        # missing keys loudly, but never fail on them (suites evolve and
+        # CI legitimately gates subsets)
+        print(f"[compare] WARNING: {len(missing)} baseline bench(es) not "
+              f"in this run, gate skipped for: {', '.join(missing)}",
               file=sys.stderr)
     if regressions:
         print(f"[compare] FAIL: {len(regressions)} regression(s) beyond "

@@ -6,7 +6,8 @@ from repro.cluster.fairshare import (
     Account, FairShareTree, MultifactorPriority, PriorityWeights,
 )
 from repro.cluster.job import (
-    Dependency, DependencyKind, Job, JobState, ResourceRequest,
+    Dependency, DependencyKind, JOB_KIND_SERVE_REPLICA, Job, JobState,
+    ResourceRequest,
 )
 from repro.cluster.node import Node, NodeState, Partition
 from repro.cluster.provision import (
@@ -17,7 +18,8 @@ from repro.cluster import commands
 
 __all__ = [
     "Account", "AccountingRecord", "Cluster", "Dependency", "DependencyKind",
-    "FairShareTree", "Job", "JobState", "MultifactorPriority",
+    "FairShareTree", "JOB_KIND_SERVE_REPLICA", "Job", "JobState",
+    "MultifactorPriority",
     "PriorityWeights", "QOS", "ResourceRequest", "Node", "NodeState",
     "Partition", "ClusterSpec", "HostSpec", "PartitionSpec",
     "default_qos_table", "provision", "tpu_pod_spec", "validate", "commands",

@@ -31,7 +31,7 @@ from repro.cluster.job import (
     Dependency, DependencyKind, Job, JobState, ResourceRequest,
 )
 from repro.cluster.node import Node, NodeState, Partition
-from repro.cluster.scheduler import Decision, schedule_pass
+from repro.cluster.scheduler import Decision, capacity_probe, schedule_pass
 from repro.policy import (
     PREEMPT_CANCEL, QOS, FairShareTree, MultifactorPriority,
     PriorityWeights, default_qos_table,
@@ -90,6 +90,8 @@ class Cluster:
         # cost of a controller cycle, what SLURM's sdiag reports)
         self.sched_stats = {"passes": 0, "last_us": 0.0, "total_us": 0.0,
                             "max_us": 0.0, "starts": 0}
+        # slurm_now-style capacity probes (autoscaler growth signal)
+        self.probe_stats = {"probes": 0, "last_nodes": 0}
         self.fairshare = fairshare or FairShareTree()
         self.qos_table = dict(qos_table) if qos_table is not None \
             else default_qos_table()
@@ -111,7 +113,8 @@ class Cluster:
                dependency: str = "", array: int = 0,
                comment: str = "", account: Optional[str] = None,
                qos: str = "normal", ckpt_interval_s: Optional[float] = None,
-               checkpoint_dir: Optional[str] = None) -> list[int]:
+               checkpoint_dir: Optional[str] = None,
+               kind: str = "batch") -> list[int]:
         """sbatch.  Returns job id(s) (``array > 0`` submits an array)."""
         partition = partition or self.default_partition()
         if partition not in self.partitions:
@@ -145,7 +148,7 @@ class Cluster:
                 run_time_s=run_time_s, script=script, dependencies=deps,
                 array_index=i if array else None, comment=comment,
                 account=account, qos=qos, ckpt_interval_s=ckpt_interval_s,
-                checkpoint_dir=checkpoint_dir)
+                checkpoint_dir=checkpoint_dir, kind=kind)
             self.jobs[jid] = job
             if not job.state.finished:
                 self._active[jid] = job
@@ -154,6 +157,17 @@ class Cluster:
             ids.append(jid)
         self.schedule()
         return ids
+
+    def capacity_now(self, req: ResourceRequest,
+                     partition: Optional[str] = None) -> int:
+        """slurm_now: the largest node count a job shaped like ``req``
+        could start immediately (the autoscaler's growth probe).  Pure
+        read — nothing is submitted, reserved, or preempted."""
+        part = self.partitions[partition or self.default_partition()]
+        n = capacity_probe(self.nodes, part, req)
+        self.probe_stats["probes"] += 1
+        self.probe_stats["last_nodes"] = n
+        return n
 
     def cancel(self, job_id: int):
         """scancel."""
@@ -515,6 +529,7 @@ class Cluster:
         c.tracer = None
         c.sched_stats = {"passes": 0, "last_us": 0.0, "total_us": 0.0,
                          "max_us": 0.0, "starts": 0}
+        c.probe_stats = {"probes": 0, "last_nodes": 0}
         c.fairshare = FairShareTree.restore(
             snap.get("fairshare", FairShareTree().snapshot()))
         c.qos_table = dict(snap.get("qos_table") or default_qos_table())

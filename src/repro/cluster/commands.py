@@ -327,7 +327,8 @@ def sshare(cluster: Cluster, tres: bool = False) -> str:
 
 
 def sdiag(cluster: Optional[Cluster] = None, tracer=None,
-          admission=None, engine=None) -> str:
+          admission=None, engine=None, router=None,
+          autoscaler=None) -> str:
     """``sdiag``-style diagnostics: scheduler cycle statistics (from the
     cluster controller), admission-controller cycle statistics (from the
     serving layer), per-tenant serving SLO percentiles (from the
@@ -337,7 +338,9 @@ def sdiag(cluster: Optional[Cluster] = None, tracer=None,
     parallelism (from a mesh-attached engine — shard layout, per-device
     KV-pool occupancy, cross-shard reductions per token).  Any subset
     of sources may be given; sections for absent sources are simply
-    omitted."""
+    omitted.  With the elastic tier, ``router`` adds routing decisions
+    plus per-replica load/radix occupancy, and ``autoscaler`` adds
+    capacity-probe and scale-up/drain counts."""
     sections = []
     if cluster is not None:
         st = cluster.sched_stats
@@ -417,6 +420,44 @@ def sdiag(cluster: Optional[Cluster] = None, tracer=None,
         for note in st["notices"]:
             lines.append(f"\tNotice:           {note}")
         sections.append("\n".join(lines))
+    if router is not None:
+        st = router.stats
+        routed = st["routed"]
+        hit_pct = st["affinity_hits"] / routed if routed else 0.0
+        lines = [
+            "Prefix-affinity router:",
+            f"\tReplicas:         {len(router.replicas)}",
+            f"\tPolicy:           {router.policy} "
+            f"(spill factor {router.spill_factor:g})",
+            f"\tRouted:           {routed}",
+            f"\tAffinity hits:    {st['affinity_hits']} ({hit_pct:.0%})",
+            f"\tSpills:           {st['spills']}",
+            f"\tDrains:           {st['drains']} "
+            f"({st['resubmitted']} requests re-routed)",
+        ]
+        for rid in sorted(router.replicas):
+            rep = router.replicas[rid]
+            occ = rep.engine.radix_occupancy()
+            lines.append(
+                f"\tReplica {rid}:        load {router.load(rid)} "
+                f"({rep.engine.active()} active, "
+                f"{rep.engine.pending()} queued), "
+                f"{occ['nodes']} radix nodes")
+        sections.append("\n".join(lines))
+    if autoscaler is not None:
+        st = autoscaler.stats
+        jobs = ", ".join(f"{rid}->job {jid}"
+                         for rid, jid in sorted(autoscaler.jobs.items()))
+        sections.append("\n".join([
+            "Autoscaler (scavenger replicas):",
+            f"\tTicks:            {st['ticks']}",
+            f"\tLast probe:       {st['last_probe']} idle "
+            f"node(s) @ {autoscaler.req.nodes}/replica",
+            f"\tScale-ups:        {st['scale_ups']}",
+            f"\tDrains:           {st['drains']} "
+            f"({st['requeued_requests']} requests requeued)",
+            f"\tReplica jobs:     {jobs or '(none)'}",
+        ]))
     if tracer is not None:
         sections.append("Serving SLO (per tenant/QOS):\n"
                         + tracer.slo.format_report())

@@ -31,6 +31,12 @@ class JobState(enum.Enum):
         return self == JobState.COMPLETED
 
 
+#: Job.kind for serving-replica placeholder jobs: the autoscaler submits
+#: one per decode-engine replica (scavenger QOS) so the replica's nodes
+#: are owned, billed, and preemptable like any other job.
+JOB_KIND_SERVE_REPLICA = "serve_replica"
+
+
 class DependencyKind(enum.Enum):
     AFTER = "after"          # dep started (or finished)
     AFTEROK = "afterok"      # dep completed successfully
@@ -89,6 +95,11 @@ class Job:
     # multi-tenancy (sacctmgr association + QOS)
     account: str = "root"
     qos: str = "normal"
+
+    # workload class: plain batch work, or a serving-replica placeholder
+    # the autoscaler manages (its "script" is a decode engine outside the
+    # simulation; the job holds the nodes and rides QOS preemption)
+    kind: str = "batch"
 
     # preemption / requeue
     requeue_count: int = 0                # times evicted back to PENDING

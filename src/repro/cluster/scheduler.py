@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import copy
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Callable, Optional
 
 from repro.cluster.job import Job, JobState
@@ -143,6 +143,30 @@ def find_allocation(job: Job, nodes: dict[str, Node],
             return cand
         return None
     return tuple(n.name for n in avail[:req.nodes])
+
+
+def capacity_probe(nodes: dict[str, Node], partition: Partition,
+                   req) -> int:
+    """slurm_now-style idle-capacity probe: the largest node count a job
+    shaped like ``req`` (per-node cpus/mem/gres, contiguity) could start
+    with RIGHT NOW — no queueing, no preemption, no reservations.
+
+    This is the autoscaler's growth signal ("largest scavenger job that
+    starts immediately"): it answers *would one more replica start*,
+    without submitting anything.  Contiguous requests go through the
+    same mesh-rectangle placement real allocation uses, so a probe
+    answer of ``n`` is a guarantee, not an estimate."""
+    upper = sum(
+        1 for nm in partition.nodes
+        if nodes[nm].fits(req.cpus_per_node, req.mem_mb_per_node,
+                          req.gres_per_node))
+    for n in range(upper, 0, -1):
+        shaped = replace(req, nodes=n)
+        probe = Job(job_id=-1, name="capacity-probe", user="",
+                    partition=partition.name, req=shaped)
+        if find_allocation(probe, nodes, partition) is not None:
+            return n
+    return 0
 
 
 def _projected_allocation(job: Job, nodes: dict[str, Node],

@@ -119,6 +119,140 @@ def resolve_use_pallas(requested: bool, backend: str) -> bool:
     return True
 
 
+def make_requests(args, cfg, names, qos_cycle) -> list:
+    """The synthetic workload both serving paths (single-engine and
+    routed) push: per-request prompt lengths/tenants/QOS are a pure
+    function of ``--seed``, so replica counts never change the
+    workload."""
+    rng = np.random.default_rng(args.seed)
+    assert args.shared_prefix < args.cache_len, "--shared-prefix too long"
+    system = rng.integers(2, cfg.vocab_size,
+                          args.shared_prefix).astype(np.int32)
+    if args.speculate and args.shared_prefix >= 8:
+        # tile a short phrase so prompt-lookup drafts have material
+        phrase = system[:8]
+        system = np.tile(phrase, -(-args.shared_prefix // 8))[
+            :args.shared_prefix]
+    requests = []
+    for rid in range(args.requests):
+        plen = int(rng.integers(4, args.cache_len // 4))
+        prompt = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
+        if args.shared_prefix:
+            prompt = np.concatenate([system, prompt])[:args.cache_len - 1]
+            if args.speculate and args.shared_prefix >= 8:
+                # land the prompt tail back inside the tiled phrase so
+                # n-gram lookups fire from the first decode step
+                prompt = np.concatenate([prompt, system[:8]])[
+                    :args.cache_len - 1]
+        requests.append(Request(
+            rid=rid,
+            prompt=prompt,
+            max_new_tokens=args.max_new,
+            temperature=float(rid % 2) * 0.8,
+            tenant=names[rid % len(names)],
+            qos=qos_cycle[rid % len(qos_cycle)]))
+    return requests
+
+
+def _serve_elastic(args, cfg, params, metrics, tenants, use_pallas,
+                   kv_paging) -> int:
+    """--replicas/--autoscale: N engines behind the prefix-affinity
+    router, optionally as scavenger jobs in a small simulated cluster
+    with the autoscaler driving replica count."""
+    from repro.cluster.commands import sdiag
+    from repro.configs.base import RunConfig
+    from repro.serving import Autoscaler, Router
+
+    if args.tp > 1 or args.speculate or args.trace:
+        print("[serve] --replicas/--autoscale path ignores --tp, "
+              "--speculate and --trace (single-engine features)")
+
+    def make_engine(admission):
+        return DecodeEngine(
+            cfg, params, num_slots=args.slots, cache_len=args.cache_len,
+            metrics=metrics, admission=admission,
+            run=RunConfig(remat="none", use_pallas=use_pallas),
+            decode_chunk=args.decode_chunk, fused=not args.no_fused,
+            prefill_buckets=parse_buckets(args.prefill_buckets),
+            kv_page_size=kv_paging, kv_pages=args.kv_pages,
+            prefix_cache=args.prefix_cache,
+            max_batch_tokens=args.max_batch_tokens)
+
+    router = Router(make_engine,
+                    replicas=0 if args.autoscale else args.replicas,
+                    policy="affinity" if args.affinity else "rr",
+                    spill_factor=args.spill_factor, metrics=metrics)
+    for name, share in tenants.items():
+        router.add_tenant(name, shares=share)
+    autoscaler = cluster = None
+    if args.autoscale:
+        from repro.cluster import (
+            Cluster, Node, Partition, ResourceRequest,
+        )
+        n_nodes = max(args.replicas, 2)
+        nodes = [Node(name=f"n{i:02d}", cpus=16, mem_mb=65536,
+                      gres={"tpu": 4}, coord=(0, i))
+                 for i in range(n_nodes)]
+        cluster = Cluster(nodes, [Partition(
+            name="serve", nodes=tuple(nd.name for nd in nodes),
+            default=True)])
+        autoscaler = Autoscaler(
+            router, cluster,
+            req=ResourceRequest(nodes=1, gres_per_node={"tpu": 4},
+                                time_limit_s=36_000),
+            min_replicas=1, max_replicas=max(args.replicas, 1))
+        autoscaler.tick()
+        print(f"[serve] autoscaler: probe saw "
+              f"{autoscaler.stats['last_probe']} idle node(s), started "
+              f"{len(router.replicas)} replica(s) as scavenger jobs")
+    names = list(tenants)
+    qos_cycle = [q.strip() for q in args.qos.split(",") if q.strip()] \
+        or ["normal"]
+    requests = make_requests(args, cfg, names, qos_cycle)
+    bursts = max(args.bursts, 1)
+    per_wave = -(-len(requests) // bursts)       # ceil division
+    t0 = time.perf_counter()
+    for w in range(bursts):
+        for req in requests[w * per_wave:(w + 1) * per_wave]:
+            router.submit(req)
+        if w < bursts - 1:
+            for _ in range(3):                    # let the wave decode a bit
+                router.step()
+        if autoscaler is not None and w == 0 and len(router.replicas) > 1:
+            # mid-run batch pressure: a high-QOS job preempts one
+            # scavenger replica job; the tick drains that replica and its
+            # in-flight requests resume elsewhere (partial output kept)
+            from repro.cluster import ResourceRequest
+            cluster.submit("batch-train", ResourceRequest(
+                nodes=1, gres_per_node={"tpu": 4}), qos="high",
+                run_time_s=600.0)
+            autoscaler.tick()
+            print(f"[serve] batch pressure: drained down to "
+                  f"{len(router.replicas)} replica(s), "
+                  f"{router.stats['resubmitted']} request(s) re-routed")
+    router.run_to_completion()
+    wall = time.perf_counter() - t0
+    total = int(metrics.counter("serve_tokens_generated").value())
+    busy = max(router.busy_seconds().values())
+    st = router.stats
+    print(f"served {len(requests)} requests on {len(router.replicas)} "
+          f"replica(s), {total} tokens in {wall:.1f}s "
+          f"({total / wall:,.1f} tok/s wall, busiest replica "
+          f"{busy:.1f}s busy)")
+    print(f"router: policy {router.policy}, {st['routed']} routed, "
+          f"{st['affinity_hits']} affinity hits, {st['spills']} spills, "
+          f"{st['drains']} drains ({st['resubmitted']} re-routed)")
+    if args.prefix_cache:
+        hits = int(metrics.counter(METRIC_SERVE_PREFIX_HITS).value())
+        misses = int(metrics.counter(METRIC_SERVE_PREFIX_MISSES).value())
+        print(f"prefix cache (all replicas): {hits} hits / {misses} "
+              f"misses, "
+              f"{int(metrics.counter(METRIC_SERVE_PREFIX_REUSED_TOKENS).value())} "
+              f"prompt tokens reused")
+    print(sdiag(cluster=cluster, router=router, autoscaler=autoscaler))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--arch", default="stablelm-3b", choices=ARCH_IDS)
@@ -202,6 +336,23 @@ def main(argv=None) -> int:
                     help="submit the workload in N bursts with a few "
                          "decode steps between waves (exercises queueing "
                          "and the queue-wait/TTFT series)")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="elastic serving: N decode-engine replicas "
+                         "behind the router; replicas share one "
+                         "fair-share ledger and one GrpTRES scope")
+    ap.add_argument("--affinity", action="store_true",
+                    help="prefix-affinity routing (consistent hash on "
+                         "the first prompt page, spill to least-loaded); "
+                         "default with --replicas is round-robin")
+    ap.add_argument("--spill-factor", type=float, default=2.0,
+                    help="with --affinity: shed to the least-loaded "
+                         "replica once the affine one's queue runs this "
+                         "many num_slots deeper (default 2.0)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="run replicas as scavenger jobs in a small "
+                         "simulated cluster: the autoscaler grows to "
+                         "--replicas while idle nodes exist and drains "
+                         "replicas when a batch job preempts them")
     ap.add_argument("--trace", default="", metavar="OUT_JSON",
                     help="record request-lifecycle spans and write a "
                          "Chrome trace-event JSON (load in Perfetto or "
@@ -239,6 +390,9 @@ def main(argv=None) -> int:
         draft_cfg = get_reduced_config(args.draft_model)
         assert draft_cfg.vocab_size == cfg.vocab_size, \
             "--draft-model must share the target's vocabulary"
+    if args.replicas > 1 or args.autoscale:
+        return _serve_elastic(args, cfg, params, metrics, tenants,
+                              use_pallas, kv_paging)
     engine = DecodeEngine(cfg, params, num_slots=args.slots,
                           cache_len=args.cache_len, metrics=metrics,
                           admission=admission,
@@ -255,36 +409,10 @@ def main(argv=None) -> int:
                           spec_source=args.spec_source,
                           draft_model=draft_cfg,
                           mesh=mesh)
-    rng = np.random.default_rng(args.seed)
     names = list(tenants)
     qos_cycle = [q.strip() for q in args.qos.split(",") if q.strip()] \
         or ["normal"]
-    assert args.shared_prefix < args.cache_len, "--shared-prefix too long"
-    system = rng.integers(2, cfg.vocab_size,
-                          args.shared_prefix).astype(np.int32)
-    if args.speculate and args.shared_prefix >= 8:
-        # tile a short phrase so prompt-lookup drafts have material
-        phrase = system[:8]
-        system = np.tile(phrase, -(-args.shared_prefix // 8))[
-            :args.shared_prefix]
-    requests = []
-    for rid in range(args.requests):
-        plen = int(rng.integers(4, args.cache_len // 4))
-        prompt = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
-        if args.shared_prefix:
-            prompt = np.concatenate([system, prompt])[:args.cache_len - 1]
-            if args.speculate and args.shared_prefix >= 8:
-                # land the prompt tail back inside the tiled phrase so
-                # n-gram lookups fire from the first decode step
-                prompt = np.concatenate([prompt, system[:8]])[
-                    :args.cache_len - 1]
-        requests.append(Request(
-            rid=rid,
-            prompt=prompt,
-            max_new_tokens=args.max_new,
-            temperature=float(rid % 2) * 0.8,
-            tenant=names[rid % len(names)],
-            qos=qos_cycle[rid % len(qos_cycle)]))
+    requests = make_requests(args, cfg, names, qos_cycle)
     bursts = max(args.bursts, 1)
     per_wave = -(-len(requests) // bursts)       # ceil division
     t0 = time.perf_counter()

@@ -74,6 +74,16 @@ METRIC_SPEC_ACCEPTED = "serve_spec_accepted_total"
 #: running acceptance rate (accepted / proposed), a gauge
 METRIC_SPEC_ACCEPT_RATE = "serve_spec_acceptance_rate"
 
+# Elastic multi-replica serving (prefix-affinity router + autoscaler).
+#: per-replica queue depth (slot holders + queued), a gauge {replica=}
+METRIC_SERVE_REPLICA_LOAD = "serve_replica_load"
+#: per-replica KV pages with >= 1 holder, a gauge {replica=}
+METRIC_SERVE_REPLICA_KV_PAGES = "serve_replica_kv_pages_in_use"
+#: requests the router sent to their prefix-affine replica
+METRIC_ROUTE_AFFINITY_HITS = "route_affinity_hits"
+#: affinity routes shed to the least-loaded replica (load-shed bound)
+METRIC_ROUTE_SPILLS = "route_spills_total"
+
 
 def _labels_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))

@@ -25,14 +25,15 @@ from repro.policy.priority import (
     MultifactorPriority, PriorityBreakdown, PriorityWeights,
 )
 from repro.policy.qos import (
-    PREEMPT_CANCEL, PREEMPT_REQUEUE, QOS, add_tres, default_qos_table,
-    format_tres, job_tres, tres_within,
+    GrpTresLedger, PREEMPT_CANCEL, PREEMPT_REQUEUE, QOS, add_tres,
+    default_qos_table, format_tres, job_tres, tres_within,
 )
 from repro.policy.usage import DEFAULT_TRES_WEIGHTS, FairShareTree
 
 __all__ = [
     "Account", "AccountTree", "DEFAULT_TRES_WEIGHTS", "FairShareTree",
-    "MultifactorPriority", "PREEMPT_CANCEL", "PREEMPT_REQUEUE",
+    "GrpTresLedger", "MultifactorPriority", "PREEMPT_CANCEL",
+    "PREEMPT_REQUEUE",
     "PriorityBreakdown", "PriorityWeights", "QOS", "add_tres",
     "default_qos_table", "format_tres", "job_tres", "tres_within",
 ]

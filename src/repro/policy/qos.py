@@ -87,6 +87,35 @@ def add_tres(into: dict, tres: dict, scale: float = 1.0) -> dict:
     return into
 
 
+class GrpTresLedger:
+    """Shared GrpTRES holdings across admission controllers.
+
+    SLURM's GrpTRES caps bind at the *association*, not per slurmctld
+    thread — a 2-slot scavenger cap means 2 slots on the whole cluster.
+    With N serving replicas, each replica's admission controller tracks
+    its own physical slots/pages; this ledger is the shared view they
+    write through so `_over_cap` checks the account's total across every
+    replica.  Holdings are keyed ``(account, qos)`` and clamped at zero
+    (release after a drain must not go negative).
+
+    Scope is the policy knob: the router wires ONE ledger into all
+    replica controllers (``grp_scope="global"``); omit it and each
+    controller falls back to its private per-replica counters —
+    GrpTRES × N, the pre-elastic behaviour.
+    """
+
+    def __init__(self):
+        self._held: dict[tuple[str, str], dict[str, float]] = {}
+
+    def adjust(self, account: str, qos: str, tres: dict):
+        held = self._held.setdefault((account, qos), {})
+        for key, amt in tres.items():
+            held[key] = max(held.get(key, 0.0) + amt, 0.0)
+
+    def held(self, account: str, qos: str) -> dict[str, float]:
+        return dict(self._held.get((account, qos), {}))
+
+
 def format_tres(tres: dict) -> str:
     """``cpu=8,mem=8192M,gres/tpu=16`` (sacctmgr-style)."""
     parts = []

@@ -1,8 +1,10 @@
 from repro.serving.admission import (
     AdmissionController, SERVING_TRES_WEIGHTS, Tenant,
 )
+from repro.serving.autoscale import Autoscaler
 from repro.serving.engine import DecodeEngine, Request
 from repro.serving.prefix import PrefixCache, RadixNode
+from repro.serving.router import HashRing, Router, affinity_key
 from repro.serving.serve_step import (
     chunked_serve_step_lowering_args, fused_serve_step_lowering_args,
     make_chunked_serve_step, make_fused_serve_step, make_serve_step,
@@ -14,9 +16,10 @@ from repro.serving.spec import (
 )
 from repro.serving.tp import TPPlan, plan_tp
 
-__all__ = ["AdmissionController", "DecodeEngine", "ModelDraftSource",
-           "NgramDraftSource", "NgramIndex", "PrefixCache",
-           "RadixNode", "Request", "SERVING_TRES_WEIGHTS", "Tenant",
+__all__ = ["AdmissionController", "Autoscaler", "DecodeEngine", "HashRing",
+           "ModelDraftSource", "NgramDraftSource", "NgramIndex",
+           "PrefixCache", "RadixNode", "Request", "Router",
+           "SERVING_TRES_WEIGHTS", "Tenant", "affinity_key",
            "chunked_serve_step_lowering_args", "draft_config",
            "fused_serve_step_lowering_args", "greedy_accept",
            "make_chunked_serve_step", "make_fused_serve_step",

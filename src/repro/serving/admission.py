@@ -108,7 +108,7 @@ class AdmissionController:
                  qos_table: Optional[dict[str, QOS]] = None,
                  weights: Optional[PriorityWeights] = None,
                  wall_clock_decay: bool = False,
-                 clock=time.monotonic, tracer=None):
+                 clock=time.monotonic, tracer=None, grp_ledger=None):
         self.tree = tree if tree is not None else FairShareTree()
         for key, w in SERVING_TRES_WEIGHTS.items():
             self.tree.tres_weights.setdefault(key, w)
@@ -122,6 +122,17 @@ class AdmissionController:
         #: optional repro.monitoring.Tracer — QUEUED spans, queue-wait
         #: SLO series, and pick-reason attributes hang off it
         self.tracer = tracer
+        #: optional shared repro.policy.GrpTresLedger — when set, GrpTRES
+        #: caps bind on the account's holdings across EVERY controller
+        #: writing through the same ledger (the router's N replicas),
+        #: not just this one's
+        self.grp_ledger = grp_ledger
+        #: optional predicate(req) -> bool: "would this request's prompt
+        #: hit the radix prefix index right now?"  The engine wires it
+        #: when the prefix cache is on; it breaks exact fair-share
+        #: priority ties toward requests that reuse cached pages (their
+        #: prefill is nearly free), falling back to FIFO within the tie.
+        self.radix_probe = None
         #: admission cycle statistics, the `sdiag` admission section
         self.stats = {"cycles": 0, "picks": 0, "preempt_picks": 0,
                       "requeues": 0}
@@ -254,8 +265,16 @@ class AdmissionController:
         qos = self.qos_table.get(req.qos)
         if qos is None or not qos.grp_tres:
             return False
-        held = {TRES_SLOTS: float(tenant.slots_by_qos.get(req.qos, 0)),
-                TRES_KV_PAGES: float(tenant.pages_by_qos.get(req.qos, 0))}
+        if self.grp_ledger is not None:
+            # global scope: the account's holdings summed across every
+            # replica controller sharing this ledger
+            total = self.grp_ledger.held(req.tenant, req.qos)
+            held = {TRES_SLOTS: total.get(TRES_SLOTS, 0.0),
+                    TRES_KV_PAGES: total.get(TRES_KV_PAGES, 0.0)}
+        else:
+            held = {TRES_SLOTS: float(tenant.slots_by_qos.get(req.qos, 0)),
+                    TRES_KV_PAGES: float(tenant.pages_by_qos.get(
+                        req.qos, 0))}
         # _est_pages: the paged engine stamps its page estimate on submit;
         # dense mode leaves it 0 so only the slot cap binds.  Under TP the
         # estimate may arrive as a per-shard vector (one logical page =
@@ -272,10 +291,21 @@ class AdmissionController:
                 continue
             if eligible is not None and not eligible(t.queue[0]):
                 continue
-            key = (self._priority(t), -t.queue[0]._seq)
+            key = (self._priority(t), self._radix_bit(t.queue[0]),
+                   -t.queue[0]._seq)
             if best is None or key > best_key:
                 best, best_key = t, key
         return best
+
+    def _radix_bit(self, req) -> int:
+        """Tie-break between tenants whose multifactor priorities are
+        exactly equal: prefer the head whose prompt hits the radix
+        prefix index (its prefill is mostly cached — admitting it first
+        is nearly free and keeps the shared pages hot).  Probe unset
+        (no prefix cache) degrades to the pure FIFO tie-break."""
+        if self.radix_probe is None:
+            return 0
+        return 1 if self.radix_probe(req) else 0
 
     def next_request(self, eligible=None):
         """Pop the next request to admit, or None (all queues empty or
@@ -293,6 +323,7 @@ class AdmissionController:
             return None
         req = t.queue.pop(0)
         t.slots_by_qos[req.qos] = t.slots_by_qos.get(req.qos, 0) + 1
+        self._ledger_adjust(req, slots=1.0)
         self._trace_pick(req, "fairshare")
         return req
 
@@ -302,6 +333,15 @@ class AdmissionController:
         if t is not None:
             t.slots_by_qos[req.qos] = max(
                 t.slots_by_qos.get(req.qos, 0) - 1, 0)
+            self._ledger_adjust(req, slots=-1.0)
+
+    def _ledger_adjust(self, req, slots: float = 0.0, pages: float = 0.0):
+        """Mirror a holdings change into the shared GrpTRES ledger (when
+        global scope is on) so sibling controllers see it."""
+        if self.grp_ledger is None:
+            return
+        self.grp_ledger.adjust(req.tenant, req.qos,
+                               {TRES_SLOTS: slots, TRES_KV_PAGES: pages})
 
     def adjust_pages(self, req, delta: int):
         """Track a tenant's reserved KV pages for the ``kv_pages``
@@ -322,6 +362,7 @@ class AdmissionController:
         if t is not None:
             t.pages_by_qos[req.qos] = max(
                 t.pages_by_qos.get(req.qos, 0) + int(np.max(delta)), 0)
+            self._ledger_adjust(req, pages=float(int(np.max(delta))))
 
     # -------------------------------------------------------- preemption ----
     def pick_victim(self, candidates: list):
@@ -367,6 +408,7 @@ class AdmissionController:
             [r for r in running if qos.can_preempt(r.qos)])
         t.queue.pop(0)
         t.slots_by_qos[head.qos] = t.slots_by_qos.get(head.qos, 0) + 1
+        self._ledger_adjust(head, slots=1.0)
         self._trace_pick(head, "preemption")
         return head, victim
 

@@ -262,6 +262,14 @@ class DecodeEngine:
             # residency billing (a page shared by h requests bills 1/h
             # to each, so the ledger charges true HBM once)
             self._page_holders: dict[int, int] = {}
+            # radix tie-break: when fair-share priorities tie exactly,
+            # admission prefers the head whose prompt hits the index
+            # (its prefill is mostly cached).  A controller the caller
+            # pre-wired keeps its own probe.
+            if self.admission.radix_probe is None:
+                self.admission.radix_probe = (
+                    lambda r: bool(self.prefix.match(
+                        self._resume_tokens(r))))
         self.cache = init_cache(cfg, num_slots, cache_len,
                                 paging=self.paging)
         if self.tp.active:
@@ -840,6 +848,36 @@ class DecodeEngine:
 
     def pending(self) -> int:
         return self.admission.pending()
+
+    def load(self) -> int:
+        """Queue depth: slot holders plus queued requests — the router's
+        spill signal and the autoscaler's emptiest-replica criterion."""
+        return self.active() + self.pending()
+
+    def radix_occupancy(self) -> dict:
+        """Prefix-index occupancy for the router/sdiag surface: cached
+        pages currently indexed and how many of them are evictable."""
+        if self.prefix is None:
+            return {"nodes": 0, "evictable_pages": 0}
+        return {"nodes": self.prefix.nodes,
+                "evictable_pages": self.prefix.evictable_pages()}
+
+    def drain(self) -> list:
+        """Evict everything and hand it back: each in-flight request
+        leaves through the preemption path (pages released, slot hold
+        returned, partial output retained — mid-prefill partials included,
+        since partials hold their slot too), then every queued request is
+        popped.  Returns all of them in arrival order, ready to resubmit
+        elsewhere; greedy decode is batch-independent, so a drained
+        request finishes bit-identical on whichever replica resumes it."""
+        for req in [r for r in self.slots if r is not None]:
+            self._evict(req)
+        drained = []
+        for t in self.admission.tenants.values():
+            drained.extend(t.queue)
+            t.queue.clear()
+        drained.sort(key=lambda r: r._seq)
+        return drained
 
     @property
     def queue(self) -> list:

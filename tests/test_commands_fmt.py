@@ -157,3 +157,55 @@ def test_scontrol_show_job_includes_tenancy():
     assert "Account=research" in out
     assert "QOS=scavenger" in out
     assert "Restarts=1" in out                # it was preempted once
+
+
+# --------------------------------------------------------- elastic tier ----
+
+def test_sdiag_router_autoscaler_golden():
+    """Deterministic elastic-tier scenario: a 2-node cluster fully
+    scaled into (2 scavenger replica jobs), 4 shared-prefix requests all
+    affine to replica 0 (SHA-1 ring placement is restart-stable, so the
+    rendering is a true golden)."""
+    import numpy as np
+
+    from repro.monitoring.metrics import (
+        METRIC_ROUTE_AFFINITY_HITS, METRIC_SERVE_REPLICA_LOAD,
+    )
+    from repro.serving import Autoscaler, Request, Router
+    from test_router import FakeEngine
+
+    c = small_cluster(2)
+    router = Router(lambda adm: FakeEngine(adm), replicas=0,
+                    policy="affinity")
+    scaler = Autoscaler(router, c, req=req(), min_replicas=1,
+                        max_replicas=2)
+    scaler.tick()
+    shared = np.arange(32, dtype=np.int32)
+    for i in range(4):
+        router.submit(Request(rid=i, prompt=shared, max_new_tokens=4))
+    router.replicas[0].engine.start()          # 4 slots -> all active
+    router.step()                              # refresh the gauges
+
+    assert commands.sdiag(router=router, autoscaler=scaler) == "\n".join([
+        "Prefix-affinity router:",
+        "\tReplicas:         2",
+        "\tPolicy:           affinity (spill factor 2)",
+        "\tRouted:           4",
+        "\tAffinity hits:    4 (100%)",
+        "\tSpills:           0",
+        "\tDrains:           0 (0 requests re-routed)",
+        "\tReplica 0:        load 4 (4 active, 0 queued), 0 radix nodes",
+        "\tReplica 1:        load 0 (0 active, 0 queued), 0 radix nodes",
+        "",
+        "Autoscaler (scavenger replicas):",
+        "\tTicks:            1",
+        "\tLast probe:       1 idle node(s) @ 1/replica",
+        "\tScale-ups:        2",
+        "\tDrains:           0 (0 requests requeued)",
+        "\tReplica jobs:     0->job 1, 1->job 2",
+    ])
+    # the per-replica gauges behind sdiag's load lines
+    m = router.metrics
+    assert m.gauge(METRIC_SERVE_REPLICA_LOAD, "").value(replica="0") == 4.0
+    assert m.gauge(METRIC_SERVE_REPLICA_LOAD, "").value(replica="1") == 0.0
+    assert m.counter(METRIC_ROUTE_AFFINITY_HITS, "").value() == 4.0

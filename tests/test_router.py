@@ -1,0 +1,325 @@
+"""Elastic multi-replica serving: the prefix-affinity router.
+
+* ``HashRing``: per-replica key spread stays within 2x of uniform and
+  removing a replica remaps *only* that replica's keys (property test);
+* routing: same-prefix requests co-locate on the affine replica, convoys
+  spill to the least-loaded one, round-robin cycles;
+* global admission: every replica bills the one shared FairShareTree
+  (usage burned on replica 0 demotes the tenant on replica 1) and the
+  one shared GrpTresLedger (a slot cap binds cluster-wide, not
+  per-replica x N — unless ``grp_scope="replica"``);
+* bit-identity: greedy output through 2 replicas == single engine,
+  including across a mid-flight drain/resume cycle;
+* ``benchmarks/run.py --compare`` names baseline benches the run skipped.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:             # container has no hypothesis wheel
+    from _mini_hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced_config
+from repro.models import init_params
+from repro.policy import QOS, default_qos_table
+from repro.serving import (
+    DecodeEngine, HashRing, Request, Router, affinity_key,
+)
+
+
+def _req(rid, prompt, tenant="default", qos="normal", max_new=4):
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=max_new, tenant=tenant, qos=qos)
+
+
+class FakeEngine:
+    """Duck-typed replica for jax-free routing tests: real admission
+    controller, no device work.  ``start()`` pulls queue heads into
+    fake slots so load/drain see in-flight requests."""
+
+    def __init__(self, admission, num_slots=4):
+        self.admission = admission
+        self.num_slots = num_slots
+        self.paging = None
+        self.running = []
+
+    def submit(self, req):
+        self.admission.submit(req)
+
+    def start(self):
+        while len(self.running) < self.num_slots:
+            req = self.admission.next_request()
+            if req is None:
+                break
+            self.running.append(req)
+
+    def active(self):
+        return len(self.running)
+
+    def pending(self):
+        return self.admission.pending()
+
+    def step(self):
+        return 0
+
+    def radix_occupancy(self):
+        return {"nodes": 0, "evictable_pages": 0}
+
+    def drain(self):
+        drained = list(self.running)
+        self.running.clear()
+        for t in self.admission.tenants.values():
+            drained.extend(t.queue)
+            t.queue.clear()
+        drained.sort(key=lambda r: r._seq)
+        return drained
+
+
+def fake_router(n=2, **kw):
+    kw.setdefault("policy", "affinity")
+    return Router(lambda adm: FakeEngine(adm), replicas=n, **kw)
+
+
+# ------------------------------------------------------------ hash ring ----
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=2, max_value=6),
+       st.integers(min_value=0, max_value=10_000))
+def test_ring_balance_and_minimal_remap(n_replicas, seed):
+    """Consistent hashing's two contracts: (1) with 64 vnodes each
+    replica owns within 2x of its uniform key share; (2) removing one
+    replica remaps only the keys it owned."""
+    ring = HashRing()
+    for r in range(n_replicas):
+        ring.add(r)
+    rng = np.random.default_rng(seed)
+    keys = [bytes(rng.integers(0, 256, 12, dtype=np.uint8).tobytes())
+            for _ in range(400)]
+    owner = {k: ring.lookup(k) for k in keys}
+    uniform = len(keys) / n_replicas
+    for rid in range(n_replicas):
+        share = sum(1 for o in owner.values() if o == rid)
+        assert share <= 2 * uniform, (rid, share, uniform)
+
+    victim = int(rng.integers(0, n_replicas))
+    ring.remove(victim)
+    for k in keys:
+        if owner[k] != victim:
+            assert ring.lookup(k) == owner[k]   # survivors keep their keys
+        else:
+            assert ring.lookup(k) != victim
+
+
+def test_ring_is_deterministic_across_instances():
+    """SHA-1, not the per-process salted hash(): two rings built the
+    same way route the same — restart-stable affinity."""
+    a, b = HashRing(), HashRing()
+    for r in (0, 1, 2):
+        a.add(r)
+        b.add(r)
+    key = affinity_key(np.arange(16, dtype=np.int32), 16)
+    assert a.lookup(key) == b.lookup(key)
+    assert a.replicas == [0, 1, 2] and len(a) == 3
+
+
+def test_affinity_key_is_first_complete_page():
+    prompt = np.arange(40, dtype=np.int32)
+    assert affinity_key(prompt, 16) == affinity_key(prompt[:16], 16)
+    assert affinity_key(prompt, 16) != affinity_key(prompt + 1, 16)
+    # shorter than one page: the whole prompt is the key
+    assert affinity_key(prompt[:5], 16) == b"0,1,2,3,4"
+
+
+# -------------------------------------------------------------- routing ----
+
+def test_affinity_colocates_shared_prefixes():
+    router = fake_router(n=3)
+    shared = np.arange(32, dtype=np.int32)
+    rids = {router.route(_req(i, shared)) for i in range(8)}
+    assert len(rids) == 1                       # all on the affine replica
+    assert rids == {router.ring.lookup(affinity_key(shared,
+                                                    router.page_size))}
+    for i in range(8):
+        router.submit(_req(10 + i, shared))
+    assert router.stats["routed"] == 8
+    assert router.stats["affinity_hits"] == 16  # 8 route() + 8 submit()
+
+
+def test_round_robin_cycles():
+    router = fake_router(n=3, policy="rr")
+    prompt = np.arange(8, dtype=np.int32)
+    got = [router.route(_req(i, prompt)) for i in range(6)]
+    assert got == [0, 1, 2, 0, 1, 2]
+
+
+def test_overloaded_affine_replica_spills_to_least_loaded():
+    router = fake_router(n=2, spill_factor=1.0)
+    shared = np.arange(32, dtype=np.int32)
+    affine = router.route(_req(0, shared))
+    other = next(r for r in router.replicas if r != affine)
+    # pile queued work past spill_factor * num_slots onto the affine one
+    for i in range(10):
+        router.replicas[affine].engine.submit(_req(100 + i, shared))
+    assert router.load(affine) - router.load(other) > 1.0 * 4
+    assert router.route(_req(1, shared)) == other
+    assert router.stats["spills"] == 1
+    # drain the convoy: affinity resumes
+    router.replicas[affine].engine.drain()
+    assert router.route(_req(2, shared)) == affine
+
+
+# ---------------------------------------------- shared admission state ----
+
+def test_replicas_share_one_fairshare_tree():
+    """Usage burned through replica 0 demotes the tenant on replica 1:
+    all per-replica controllers bill the same tree object."""
+    router = fake_router(n=2)
+    router.add_tenant("heavy", shares=1)
+    router.add_tenant("light", shares=1)
+    r0, r1 = (router.replicas[r] for r in sorted(router.replicas))
+    assert r0.admission.tree is router.tree
+    assert r1.admission.tree is router.tree
+
+    prompt = np.arange(8, dtype=np.int32)
+    r1.engine.submit(_req(1, prompt, tenant="heavy"))
+    r1.engine.submit(_req(2, prompt, tenant="light"))
+    # equal usage: FIFO tie-break picks the earlier arrival ("heavy")...
+    assert r1.admission._best_tenant().name == "heavy"
+    # ...until replica 0 bills tokens for "heavy" on the shared tree
+    r0.admission.tree.charge_tres("heavy", {"tokens": 10_000.0})
+    assert r1.admission._best_tenant().name == "light"
+
+
+def _capped_table():
+    table = default_qos_table()
+    table["normal"] = QOS(name="normal", priority=table["normal"].priority,
+                          grp_tres={"slots": 2})
+    return table
+
+
+def test_grp_tres_cap_binds_globally_across_replicas():
+    """grp_scope="global" (default): 2 slots for the account means 2
+    across the whole fleet — replica 1 refuses the third admission even
+    though its own slots are free."""
+    router = fake_router(n=2, qos_table=_capped_table())
+    prompt = np.arange(8, dtype=np.int32)
+    r0, r1 = (router.replicas[r] for r in sorted(router.replicas))
+    assert r0.admission.grp_ledger is router.grp_ledger
+    for i in range(2):
+        r0.engine.submit(_req(i, prompt, tenant="acme"))
+    r1.engine.submit(_req(2, prompt, tenant="acme"))
+    r0.engine.start()                           # takes 2 slots on replica 0
+    assert r0.engine.active() == 2
+    assert router.grp_ledger.held("acme", "normal")["slots"] == 2.0
+    assert r1.admission.next_request() is None  # global cap is exhausted
+    r0.admission.release(r0.engine.running.pop())
+    assert r1.admission.next_request() is not None
+
+
+def test_grp_tres_cap_per_replica_scope():
+    """grp_scope="replica": no shared ledger — the same workload admits
+    on replica 1 because each controller counts only its own slots."""
+    router = fake_router(n=2, qos_table=_capped_table(),
+                         grp_scope="replica")
+    assert router.grp_ledger is None
+    prompt = np.arange(8, dtype=np.int32)
+    r0, r1 = (router.replicas[r] for r in sorted(router.replicas))
+    for i in range(2):
+        r0.engine.submit(_req(i, prompt, tenant="acme"))
+    r1.engine.submit(_req(2, prompt, tenant="acme"))
+    r0.engine.start()
+    assert r1.admission.next_request() is not None
+
+
+# ------------------------------------------------- bit-identity (jax) ----
+
+def _engines(cfg, params):
+    def make(adm):
+        return DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                            admission=adm)
+    return make
+
+
+def test_two_replicas_bit_identical_to_single_engine():
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, 5 + i).astype(np.int32)
+               for i in range(5)]
+
+    ref = [Request(rid=i, prompt=p, max_new_tokens=4)
+           for i, p in enumerate(prompts)]
+    single = DecodeEngine(cfg, params, num_slots=2, cache_len=64)
+    for r in ref:
+        single.submit(r)
+    single.run_to_completion()
+
+    router = Router(_engines(cfg, params), replicas=2, policy="rr")
+    got = [Request(rid=i, prompt=p, max_new_tokens=4)
+           for i, p in enumerate(prompts)]
+    for r in got:
+        router.submit(r)
+    router.run_to_completion()
+    for g, s in zip(got, ref):
+        assert g.done and g.output == s.output, (g.rid, g.output, s.output)
+
+
+def test_drain_resumes_in_flight_requests_bit_identically():
+    """The autoscaler's core contract: draining a replica mid-decode
+    moves its in-flight requests (partial output retained) to the
+    survivors and the final greedy outputs are unchanged."""
+    cfg = get_reduced_config("stablelm-3b")
+    params = init_params(cfg, 0)
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, 6 + i).astype(np.int32)
+               for i in range(4)]
+
+    ref = [Request(rid=i, prompt=p, max_new_tokens=6)
+           for i, p in enumerate(prompts)]
+    single = DecodeEngine(cfg, params, num_slots=2, cache_len=64)
+    for r in ref:
+        single.submit(r)
+    single.run_to_completion()
+
+    router = Router(_engines(cfg, params), replicas=2, policy="rr")
+    got = [Request(rid=i, prompt=p, max_new_tokens=6)
+           for i, p in enumerate(prompts)]
+    placed = [router.submit(r) for r in got]    # rr: 0, 1, 0, 1
+    router.step()                               # partial output everywhere
+    victim = placed[1]
+    on_victim = [r for r, rid in zip(got, placed) if rid == victim]
+    assert router.load(victim) > 0
+    partial = {r.rid: list(r.output) for r in on_victim}
+    assert any(partial.values())                # genuinely mid-flight
+
+    moved = router.remove_replica(victim)
+    assert moved == len(on_victim)
+    assert router.stats["drains"] == 1
+    assert router.stats["resubmitted"] == moved
+    for r in on_victim:                         # partial output retained
+        assert list(r.output)[:len(partial[r.rid])] == partial[r.rid]
+
+    router.run_to_completion()
+    for g, s in zip(got, ref):
+        assert g.done and g.output == s.output, (g.rid, g.output, s.output)
+    assert all(r.preemptions >= 1 for r in on_victim)
+
+
+# ------------------------------------------------------ bench baseline ----
+
+def test_compare_warns_on_baseline_benches_missing_from_run(
+        tmp_path, capsys):
+    """Satellite: a partial run against a full baseline must name the
+    benches it skipped on stderr (but still pass — CI gates subsets)."""
+    from benchmarks.run import compare_against, write_results
+    path = tmp_path / "baseline.json"
+    write_results([("kept", 100.0, "x"), ("gone_a", 50.0, "y"),
+                   ("gone_b", 80.0, "z")], str(path))
+    assert compare_against([("kept", 101.0, "x")], str(path)) == 0
+    err = capsys.readouterr().err
+    assert "WARNING: 2 baseline bench(es) not in this run" in err
+    assert "gone_a, gone_b" in err
+    # full run: no warning
+    assert compare_against([("kept", 100.0, "x"), ("gone_a", 50.0, "y"),
+                            ("gone_b", 80.0, "z")], str(path)) == 0
+    assert "WARNING" not in capsys.readouterr().err

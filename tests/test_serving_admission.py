@@ -311,3 +311,57 @@ def test_per_tenant_serve_metrics_exported(tiny_model):
     text = metrics.expose()
     assert 'serve_tenant_tokens_generated{tenant="alice"}' in text
     assert 'serve_tenant_requests_admitted{tenant="bob"}' in text
+
+
+# ------------------------------------------------- radix-aware tie-break ----
+
+def test_radix_tie_break_prefers_cached_prompts():
+    """When two tenants' multifactor priorities tie *exactly*, the head
+    whose prompt would hit the radix prefix index is admitted first (its
+    prefill is mostly cached pages, so admitting it is nearly free and
+    keeps those pages hot).  Probe unset degrades to pure FIFO; a real
+    priority gap still dominates the tie-break bit."""
+    # no probe (no prefix cache): FIFO within the tie
+    ctrl = AdmissionController()
+    cold, hot = _req(1, tenant="a"), _req(2, tenant="b")
+    ctrl.submit(cold)
+    ctrl.submit(hot)
+    assert ctrl.next_request() is cold
+
+    # probe wired: the later-arriving cached prompt jumps the tie
+    ctrl = AdmissionController()
+    cold, hot = _req(1, tenant="a"), _req(2, tenant="b")
+    ctrl.radix_probe = lambda r: r is hot
+    ctrl.submit(cold)
+    ctrl.submit(hot)
+    assert ctrl.next_request() is hot
+    assert ctrl.next_request() is cold
+
+    # fair-share still dominates: burned usage loses despite the hit
+    ctrl = AdmissionController()
+    ctrl.add_tenant("a", shares=1)
+    ctrl.add_tenant("b", shares=1)
+    cold, hot = _req(1, tenant="a"), _req(2, tenant="b")
+    ctrl.radix_probe = lambda r: r is hot
+    ctrl.tree.charge_tres("b", {"tokens": 10_000.0})
+    ctrl.submit(cold)
+    ctrl.submit(hot)
+    assert ctrl.next_request() is cold
+
+
+def test_engine_wires_radix_probe_into_admission(tiny_model):
+    """The prefix-cache engine installs the probe on its controller; a
+    dense engine leaves the controller in FIFO-tie-break mode."""
+    cfg, params = tiny_model
+    dense = DecodeEngine(cfg, params, num_slots=2, cache_len=64)
+    assert dense.admission.radix_probe is None
+    paged = DecodeEngine(cfg, params, num_slots=2, cache_len=64,
+                         kv_page_size=8, prefix_cache=True)
+    probe = paged.admission.radix_probe
+    assert probe is not None
+    rq = _req(0, plen=16, vocab=cfg.vocab_size)
+    assert probe(rq) is False          # empty index: nothing to hit
+    paged.submit(rq)
+    paged.run_to_completion()          # prompt pages now in the index
+    again = _req(1, plen=16, vocab=cfg.vocab_size, seed=0)
+    assert probe(again) is True        # same seed -> same prompt
